@@ -1,0 +1,189 @@
+"""Benchmarks reproducing the thesis' figures 4.1-4.7 and the §5.1.2
+time-to-accuracy claims, in simulated time (see DESIGN.md §2).
+
+Locked regime (see EXPERIMENTS.md §Paper-claims for the calibration trail):
+synthetic 10-class task at noise 0.2, 10 workers x 64-sample batches,
+'extreme' heterogeneity (the thesis' contended-VM setting), 10 local epochs
+per round, target accuracy 80%.
+
+Each function returns {name: history} plus derived metrics; curves land in
+benchmarks/results/figures/<fig>.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.configs.paper_cnn import FAST_CIFAR_CNN
+from repro.core import (TABLE_4_1, TABLE_4_2, make_setup, run_fl,
+                        run_sequential_baseline, time_to_accuracy)
+
+RESULTS = Path(__file__).resolve().parent / "results" / "figures"
+
+REGIME = dict(noise=0.2, batch_size=64, het="extreme")
+EP = 10
+ALG2 = {"r": EP, "T0": 0.0, "A": 0.01}
+ASYNC_KW = dict(async_latest_table=False, async_alpha=0.9,
+                async_stale_pow=0.25, aggregator="linear")
+
+
+def _dump(fig: str, curves: dict, derived: dict):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    payload = {
+        "curves": {k: [(p.time, p.accuracy) for p in v]
+                   for k, v in curves.items()},
+        "derived": derived,
+    }
+    (RESULTS / f"{fig}.json").write_text(json.dumps(payload, indent=2))
+    return derived
+
+
+def fig4_1_sequential_vs_fl():
+    """FL (even data, no selection) vs sequential: FL leads early,
+    sequential reaches its plateau first (thesis finding 1)."""
+    setup = make_setup(TABLE_4_1["mnist_even"], seed=0, **REGIME)
+    seq = run_sequential_baseline(setup, epochs_per_round=EP, max_rounds=60)
+    fl = run_fl(setup, mode="sync", selector="all", epochs_per_round=EP,
+                max_rounds=120)
+    t60 = {"sequential": time_to_accuracy(seq, 0.6),
+           "fl_even": time_to_accuracy(fl, 0.6)}
+    return _dump("fig4_1", {"sequential": seq, "fl_even": fl},
+                 {"t60": t60, "fl_leads_early": t60["fl_even"] < t60["sequential"]})
+
+
+def fig4_2_even_vs_uneven():
+    even = make_setup(TABLE_4_1["mnist_even"], seed=0, **REGIME)
+    uneven = make_setup(TABLE_4_1["mnist_uneven"], seed=0, **REGIME)
+    h_even = run_fl(even, mode="sync", selector="all", epochs_per_round=EP,
+                    max_rounds=120)
+    h_uneven = run_fl(uneven, mode="sync", selector="all", epochs_per_round=EP,
+                      max_rounds=120)
+    d = {"t70_even": time_to_accuracy(h_even, 0.7),
+         "t70_uneven": time_to_accuracy(h_uneven, 0.7)}
+    return _dump("fig4_2", {"even": h_even, "uneven": h_uneven}, d)
+
+
+def fig4_3_random_vs_sequential():
+    setup = make_setup(TABLE_4_1["mnist_even"], seed=0, **REGIME)
+    seq = run_sequential_baseline(setup, epochs_per_round=EP, max_rounds=60)
+    rnd = run_fl(setup, mode="sync", selector="random", epochs_per_round=EP,
+                 max_rounds=150, selector_kw={"k": 5, "seed": 1})
+    d = {"t80_sequential": time_to_accuracy(seq, 0.8),
+         "t80_random": time_to_accuracy(rnd, 0.8)}
+    return _dump("fig4_3", {"sequential": seq, "random": rnd}, d)
+
+
+HARD_REGIME = dict(noise=0.35, batch_size=64, het="extreme")
+# ^ the thesis' model/data property (§4.2.4): any single tier's data is
+#   insufficient for the target — required for the rmin/rmax stall (fig 4.5)
+
+
+def fig4_4_rminrmax_vs_sequential():
+    setup = make_setup(TABLE_4_1["mnist_even"], seed=0, **HARD_REGIME)
+    seq = run_sequential_baseline(setup, epochs_per_round=EP, max_rounds=60)
+    rmm = run_fl(setup, mode="sync", selector="rmin_rmax", epochs_per_round=EP,
+                 max_rounds=150, selector_kw={"rmin": 5.0, "rmax": 5.0})
+    d = {"t80_sequential": time_to_accuracy(seq, 0.8),
+         "t80_rminrmax": time_to_accuracy(rmm, 0.8),
+         "final_rminrmax": rmm[-1].accuracy}
+    return _dump("fig4_4", {"sequential": seq, "rmin_rmax": rmm}, d)
+
+
+def fig4_5_rminrmax_initialisation():
+    """Thesis fig 4.5: close rmin/rmax inits select too few workers and the
+    eq-3.1/3.2 feedback can stall the run below its potential."""
+    setup = make_setup(TABLE_4_1["mnist_even"], seed=0, **HARD_REGIME)
+    curves, finals = {}, {}
+    for rmax in (5.0, 7.0, 12.0):
+        h = run_fl(setup, mode="sync", selector="rmin_rmax",
+                   epochs_per_round=EP, max_rounds=120,
+                   selector_kw={"rmin": 5.0, "rmax": rmax})
+        curves[f"rmax={rmax}"] = h
+        finals[f"rmax={rmax}"] = h[-1].accuracy
+    return _dump("fig4_5", curves, {"finals": finals})
+
+
+def fig4_6_alg2_sync():
+    setup = make_setup(TABLE_4_1["mnist_even"], seed=0, **REGIME)
+    seq = run_sequential_baseline(setup, epochs_per_round=EP, max_rounds=60)
+    alg2 = run_fl(setup, mode="sync", selector="time_based",
+                  epochs_per_round=EP, max_rounds=300, selector_kw=ALG2)
+    s, y = time_to_accuracy(seq, 0.8), time_to_accuracy(alg2, 0.8)
+    return _dump("fig4_6", {"sequential": seq, "alg2_sync": alg2},
+                 {"t80_sequential": s, "t80_alg2_sync": y,
+                  "improvement_pct": 100 * (1 - y / s)})
+
+
+def fig4_7_alg2_async():
+    setup = make_setup(TABLE_4_1["mnist_even"], seed=0, **REGIME)
+    seq = run_sequential_baseline(setup, epochs_per_round=EP, max_rounds=60)
+    sync = run_fl(setup, mode="sync", selector="time_based",
+                  epochs_per_round=EP, max_rounds=300, selector_kw=ALG2)
+    asyn = run_fl(setup, mode="async", selector="time_based",
+                  epochs_per_round=EP, max_rounds=900, selector_kw=ALG2,
+                  **ASYNC_KW)
+    s = time_to_accuracy(seq, 0.8)
+    y = time_to_accuracy(sync, 0.8)
+    a = time_to_accuracy(asyn, 0.8)
+    return _dump("fig4_7", {"sequential": seq, "alg2_sync": sync,
+                            "alg2_async": asyn},
+                 {"t80_sequential": s, "t80_sync": y, "t80_async": a,
+                  "sync_vs_seq_pct": 100 * (1 - y / s),
+                  "async_vs_sync_pct": 100 * (1 - a / y)})
+
+
+def table5_1_time_to_accuracy():
+    """§5.1.2 headline: MNIST-class + CIFAR-class time-to-target table
+    (paper: sync+alg2 33.9%/59.0% faster than sequential; async a further
+    63.3%/36.4%)."""
+    rows = {}
+    for task, kw, target in [
+            ("mnist-class", dict(**REGIME), 0.8),
+            ("cifar-class", dict(noise=1.0, batch_size=64, het="extreme",
+                                 cfg=FAST_CIFAR_CNN, mlp_lr=0.03), 0.8)]:
+        setup = make_setup(TABLE_4_1["mnist_even"], seed=0, **kw)
+        seq = run_sequential_baseline(setup, epochs_per_round=EP,
+                                      max_rounds=80)
+        sync = run_fl(setup, mode="sync", selector="time_based",
+                      epochs_per_round=EP, max_rounds=400, selector_kw=ALG2)
+        asyn = run_fl(setup, mode="async", selector="time_based",
+                      epochs_per_round=EP, max_rounds=1200, selector_kw=ALG2,
+                      **ASYNC_KW)
+        s = time_to_accuracy(seq, target)
+        y = time_to_accuracy(sync, target)
+        a = time_to_accuracy(asyn, target)
+        rows[task] = {
+            "target": target,
+            "t_sequential": s, "t_sync_alg2": y, "t_async_alg2": a,
+            "sync_vs_seq_pct": None if not (s and y) else 100 * (1 - y / s),
+            "async_vs_sync_pct": None if not (y and a) else 100 * (1 - a / y),
+        }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "table5_1.json").write_text(json.dumps(rows, indent=2))
+    return rows
+
+
+def fig30_workers():
+    """Thesis table 4.2 scale: 30 workers, even split."""
+    setup = make_setup(TABLE_4_2["mnist_even"], seed=0, **REGIME)
+    seq = run_sequential_baseline(setup, epochs_per_round=EP, max_rounds=60)
+    alg2 = run_fl(setup, mode="sync", selector="time_based",
+                  epochs_per_round=EP, max_rounds=300, selector_kw=ALG2)
+    s, y = time_to_accuracy(seq, 0.8), time_to_accuracy(alg2, 0.8)
+    return _dump("fig_30workers", {"sequential": seq, "alg2_sync": alg2},
+                 {"t80_sequential": s, "t80_alg2_sync": y,
+                  "improvement_pct": None if not (s and y) else 100 * (1 - y / s)})
+
+
+ALL = {
+    "fig4_1_sequential_vs_fl": fig4_1_sequential_vs_fl,
+    "fig4_2_even_vs_uneven": fig4_2_even_vs_uneven,
+    "fig4_3_random_vs_sequential": fig4_3_random_vs_sequential,
+    "fig4_4_rminrmax_vs_sequential": fig4_4_rminrmax_vs_sequential,
+    "fig4_5_rminrmax_initialisation": fig4_5_rminrmax_initialisation,
+    "fig4_6_alg2_sync": fig4_6_alg2_sync,
+    "fig4_7_alg2_async": fig4_7_alg2_async,
+    "table5_1_time_to_accuracy": table5_1_time_to_accuracy,
+    "fig_30workers": fig30_workers,
+}

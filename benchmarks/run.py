@@ -1,0 +1,37 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows (derived = the figure's headline metric), then the roofline and
+# FL-collective tables from the dry-run artifacts.
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def main() -> None:
+    from benchmarks import fl_figures, roofline
+
+    print("name,us_per_call,derived")
+    for name, fn in fl_figures.ALL.items():
+        t0 = time.time()
+        derived = fn()
+        us = (time.time() - t0) * 1e6
+        short = json.dumps(derived, default=lambda o: round(o, 3)
+                           if isinstance(o, float) else o)
+        short = short.replace(",", ";")
+        print(f"{name},{us:.0f},{short}")
+
+    print()
+    print("== Roofline (single pod, per-device seconds per step) ==")
+    print(roofline.table("pod_16x16"))
+    print()
+    print("== Multi-pod (512 chips) ==")
+    print(roofline.table("multipod_2x16x16"))
+    print()
+    print("== Paper technique at pod scale: sync-DP vs federated local-SGD ==")
+    print(roofline.fl_comparison())
+
+
+if __name__ == '__main__':
+    main()

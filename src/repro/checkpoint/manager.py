@@ -1,0 +1,68 @@
+"""Checkpoint/restart on top of the data warehouse's atomic disk storage.
+
+Fault-tolerance contract: a step-``k`` checkpoint is visible iff it was
+written completely (atomic rename); ``restore_latest`` after any crash
+resumes from the newest complete step; ``keep`` bounds disk usage.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import tempfile
+import time
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    def _path(self, step: int) -> Path:
+        return self.dir / f"ckpt_{step:012d}.pkl"
+
+    def save(self, step: int, state: Any, metadata: Optional[dict] = None):
+        payload = {
+            "step": step,
+            "state": jax.tree.map(np.asarray, state),
+            "metadata": metadata or {},
+            "wall_time": time.time(),
+        }
+        data = pickle.dumps(payload)
+        fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self._path(step))    # atomic publish
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        self._gc()
+
+    def _gc(self):
+        ckpts = sorted(self.dir.glob("ckpt_*.pkl"))
+        for old in ckpts[:-self.keep]:
+            old.unlink()
+
+    def steps(self):
+        return sorted(int(p.stem.split("_")[1]) for p in self.dir.glob("ckpt_*.pkl"))
+
+    def restore(self, step: int) -> Tuple[int, Any, dict]:
+        with open(self._path(step), "rb") as f:
+            payload = pickle.load(f)
+        return payload["step"], payload["state"], payload["metadata"]
+
+    def restore_latest(self) -> Optional[Tuple[int, Any, dict]]:
+        steps = self.steps()
+        if not steps:
+            return None
+        return self.restore(steps[-1])

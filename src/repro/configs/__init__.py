@@ -1,0 +1,1 @@
+from .base import ModelConfig, SHAPES, get_config, list_archs

@@ -1,0 +1,88 @@
+"""Aggregation algorithms (thesis §2.1.3, eqs 2.1–2.7).
+
+All operate on model-weight pytrees. ``staleness`` of a response is
+``i - xi``: current server version minus the server version the worker
+fetched before training.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class WorkerUpdate:
+    weights: object          # pytree
+    staleness: int = 0       # i - xi
+    n_data: int = 1          # batches of training data the worker used
+
+
+def _weighted_mean(trees: Sequence, weights: Sequence[float]):
+    w = np.asarray(weights, dtype=np.float64)
+    s = w.sum()
+    if s <= 0:
+        raise ValueError("aggregation weights sum to zero")
+    w = (w / s).astype(np.float32)
+
+    def agg(*leaves):
+        out = jnp.zeros_like(leaves[0], dtype=jnp.float32)
+        for wi, leaf in zip(w, leaves):
+            out = out + wi * leaf.astype(jnp.float32)
+        return out.astype(leaves[0].dtype)
+    return jax.tree.map(agg, *trees)
+
+
+# --- eq 2.1 / 2.2: federated averaging (sync + async are the same formula;
+# async simply admits updates with staleness > 0) -------------------------
+
+def fedavg(updates: List[WorkerUpdate]):
+    return _weighted_mean([u.weights for u in updates], [1.0] * len(updates))
+
+
+# --- eqs 2.3-2.7: weighted federated averaging ----------------------------
+
+def linear_weight(staleness: int) -> float:          # eq 2.5
+    return 1.0 / (staleness + 1.0)
+
+
+def polynomial_weight(staleness: int, a: float = 0.5) -> float:   # eq 2.6
+    return float((staleness + 1.0) ** (-a))
+
+
+def exponential_weight(staleness: int, a: float = 0.5) -> float:  # eq 2.7
+    return float(np.exp(-a * staleness))
+
+
+def weighted_fedavg(updates: List[WorkerUpdate],
+                    weight_fn: Callable[[int], float] = linear_weight,
+                    data_weighted: bool = True):
+    """Eqs 2.3/2.4 with WEI_x from a staleness weight function, optionally
+    multiplied by each worker's data size (thesis §2.1.3: 'size of each
+    worker's available data' as an extra factor)."""
+    ws = [weight_fn(u.staleness) * (u.n_data if data_weighted else 1.0)
+          for u in updates]
+    return _weighted_mean([u.weights for u in updates], ws)
+
+
+AGGREGATORS = {
+    "fedavg": fedavg,
+    "linear": lambda ups: weighted_fedavg(ups, linear_weight),
+    "polynomial": lambda ups: weighted_fedavg(ups, polynomial_weight),
+    "exponential": lambda ups: weighted_fedavg(ups, exponential_weight),
+}
+
+
+def mix_into(server_weights, aggregate, alpha: float = 1.0):
+    """Server-side mixing: M_{i+1} = (1-alpha)*M_i + alpha*aggregate.
+    alpha=1 reproduces the thesis' replace-on-aggregate; alpha<1 is the
+    standard async-FL damping for stale single-worker merges."""
+    if alpha >= 1.0:
+        return aggregate
+    return jax.tree.map(
+        lambda s, a: ((1 - alpha) * s.astype(jnp.float32)
+                      + alpha * a.astype(jnp.float32)).astype(s.dtype),
+        server_weights, aggregate)

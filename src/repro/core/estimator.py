@@ -1,0 +1,62 @@
+"""Training/transmission time estimation (thesis §3.4.4, eq 3.4).
+
+``T_one <- T_onedata / CPU_freq_server * CPU_freq_w * CPU_prop_w * N_w``
+
+(the thesis' multiplier semantics: a worker's per-batch time scales with the
+server-measured per-batch time by the ratio of *effective* CPU throughputs;
+here the effective throughput is freq*availability, so the per-batch time
+multiplies by ``server_freq / (freq_w * prop_w)``; eq 3.4 writes the product
+form of the same heuristic).
+
+Transmission time is *measured*, not profiled — the thesis transmits the
+randomly-initialised weights once to each worker because its FL channel is
+separate from FogBus2's (§3.4.4). ``measure_transmit`` mirrors that.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+@dataclass
+class WorkerProfile:
+    """System statistics the FogBus2 Profiler exposes per worker."""
+    worker_id: str
+    cpu_freq: float = 2.0        # GHz
+    cpu_prop: float = 1.0        # available fraction of the CPU
+    bandwidth: float = 100e6     # bytes/s on the weight-transfer channel
+    n_batches: int = 1           # batches of training data held (tables 4.1/4.2)
+    failed: bool = False         # fault-injection flag (node failure)
+
+
+class TimeEstimator:
+    def __init__(self, server_freq: float = 3.0,
+                 t_onebatch_server: float = 0.05):
+        # T_onedata measured by the aggregation server training one batch
+        self.server_freq = server_freq
+        self.t_onebatch_server = t_onebatch_server
+        # measured values override estimates once a worker has responded
+        self._measured_t_one: Dict[str, float] = {}
+        self._measured_t_tx: Dict[str, float] = {}
+
+    # --- eq 3.4 ---
+    def t_one(self, p: WorkerProfile) -> float:
+        """Time for worker to train ONE epoch over its whole local data."""
+        if p.worker_id in self._measured_t_one:
+            return self._measured_t_one[p.worker_id]
+        per_batch = self.t_onebatch_server * self.server_freq / \
+            max(p.cpu_freq * p.cpu_prop, 1e-9)
+        return per_batch * max(p.n_batches, 0)
+
+    def t_transmit(self, p: WorkerProfile, model_bytes: int) -> float:
+        if p.worker_id in self._measured_t_tx:
+            return self._measured_t_tx[p.worker_id]
+        return model_bytes / max(p.bandwidth, 1.0)
+
+    # --- measurement feedback (thesis: 'after any worker ... the actual
+    # time consumed for communication and training is updated') ---
+    def observe_training(self, worker_id: str, t_one_measured: float):
+        self._measured_t_one[worker_id] = t_one_measured
+
+    def observe_transmit(self, worker_id: str, t_tx_measured: float):
+        self._measured_t_tx[worker_id] = t_tx_measured

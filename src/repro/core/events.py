@@ -1,0 +1,54 @@
+"""Deterministic discrete-event engine.
+
+The thesis evaluates FL by wall-clock time-to-accuracy on four heterogeneous
+VMs. Inside one CPU container that heterogeneity cannot physically exist, so
+every paper experiment runs in *simulated time*: training and transmission
+durations come from the same system statistics FogBus2's profiler exposes
+(CPU frequency x availability, data size, link bandwidth), while the actual
+numerics (JAX training steps) execute for real. The engine is deterministic:
+ties break by sequence number, never by wall clock.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    fn: Callable = field(compare=False)
+    args: tuple = field(compare=False, default=())
+
+
+class EventLoop:
+    def __init__(self):
+        self._q: list[_Event] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        self._stopped = False
+
+    def schedule(self, delay: float, fn: Callable, *args) -> None:
+        assert delay >= 0, delay
+        heapq.heappush(self._q, _Event(self.now + delay, next(self._seq), fn, args))
+
+    def at(self, time: float, fn: Callable, *args) -> None:
+        self.schedule(max(0.0, time - self.now), fn, *args)
+
+    def stop(self) -> None:
+        self._stopped = True
+
+    def run(self, until: Optional[float] = None, max_events: int = 10_000_000):
+        n = 0
+        while self._q and not self._stopped and n < max_events:
+            ev = heapq.heappop(self._q)
+            if until is not None and ev.time > until:
+                heapq.heappush(self._q, ev)
+                break
+            self.now = ev.time
+            ev.fn(*ev.args)
+            n += 1
+        return self.now

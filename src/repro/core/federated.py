@@ -1,0 +1,86 @@
+"""Pod-level federated training: the paper's FL mechanism as a first-class
+multi-pod distributed-training feature.
+
+Mapping (DESIGN.md §2): each pod is an FL *worker*; the aggregation server is
+the cross-pod reduction. Params carry a leading ``n_pods`` dim sharded over
+the ``pod`` mesh axis, and the per-step ``fl_local_step`` is a ``jax.vmap``
+of the ordinary sharded ``train_step`` over that dim — so gradients reduce
+over (``data``, ``model``) only and *no pod-axis collective exists in the
+per-step HLO*. ``fl_round`` is the aggregation server: a staleness/selection-
+weighted average over the pod dim (one parameter-sized pod all-reduce every H
+steps — the paper's "j local epochs before responding").
+
+This is exactly the thesis' FedAvg/local-SGD with worker selection, where the
+scarce cross-pod link plays the role of the edge worker's WAN uplink.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import train_step
+
+
+def stack_for_pods(tree, n_pods: int):
+    """Replicate a pytree with a new leading pod dim (worker-local copies)."""
+    return jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n_pods,) + p.shape), tree)
+
+
+def unstack_pod(tree, idx: int = 0):
+    return jax.tree.map(lambda p: p[idx], tree)
+
+
+def fl_local_step(stacked_params, stacked_opt, batch, *, cfg, optimizer,
+                  n_pods: int, n_microbatch: int = 1):
+    """One local-SGD step on every pod worker independently.
+
+    batch leaves are (B_global, ...) and get reshaped to (n_pods, B/n_pods,
+    ...) so the pod dim lines up with the stacked params.
+    """
+    def split(x):
+        return x.reshape((n_pods, x.shape[0] // n_pods) + x.shape[1:])
+    pb = jax.tree.map(split, batch)
+    step = functools.partial(train_step, cfg=cfg, optimizer=optimizer,
+                             n_microbatch=n_microbatch)
+    from repro.parallel.sharding import pod_axis_is_vmapped
+    with pod_axis_is_vmapped():
+        return jax.vmap(step)(stacked_params, stacked_opt, pb)
+
+
+def fl_round(stacked_params, weights):
+    """Aggregation server: weighted average over the pod dim, re-broadcast.
+
+    ``weights``: (n_pods,) — selection mask x aggregation weight (FedAvg:
+    1/|selected|; staleness-weighted: eqs 2.3-2.7 computed host-side by the
+    ``AggregationServer``). Non-selected workers keep training on the merged
+    model (their next round starts from the aggregate, as in the thesis'
+    synchronous mode); weight 0 removes their contribution.
+    """
+    n_pods = weights.shape[0]
+    w = weights / jnp.maximum(weights.sum(), 1e-9)
+
+    def agg(p):
+        merged = jnp.einsum("p...,p->...", p.astype(jnp.float32), w)
+        return jnp.broadcast_to(merged[None], (n_pods,) + merged.shape
+                                ).astype(p.dtype)
+    return jax.tree.map(agg, stacked_params)
+
+
+def fl_round_delta_compressed(stacked_params, anchor_params, weights, *,
+                              compressor):
+    """Beyond-paper variant: aggregate *compressed deltas* from the anchor
+    (last merged model) instead of raw weights — see core/compression.py."""
+    n_pods = weights.shape[0]
+    w = weights / jnp.maximum(weights.sum(), 1e-9)
+
+    def agg(p, a):
+        delta = p.astype(jnp.float32) - a.astype(jnp.float32)[None]
+        cdelta = compressor(delta)
+        merged = a.astype(jnp.float32) + jnp.einsum("p...,p->...", cdelta, w)
+        return jnp.broadcast_to(merged[None], (n_pods,) + merged.shape
+                                ).astype(p.dtype)
+    return jax.tree.map(agg, stacked_params, anchor_params)

@@ -1,0 +1,142 @@
+"""Worker-selection algorithms (thesis §3.4).
+
+Algorithm 1 — R-min/R-max:
+    T_min_w = T_one_w * rmin + T_transmit_w
+    T_max_w = T_one_w * rmax + T_transmit_w
+    T_minimum = min_w T_max_w
+    selected = { w : T_min_w <= T_minimum }
+  with post-round updates (eqs 3.1/3.2):
+    rmin *= (acc_n + 1) / (acc_{n-1} + 1)       # shrinks as accuracy grows
+    rmax *= (acc_{n-1} + 1) / (acc_n + 1)^{-1}  # i.e. grows as accuracy grows
+
+  (the thesis text: decreasing rmin while increasing rmax lets slow workers
+  join as training progresses; mis-initialisation stalls training — fig 4.5 —
+  which our reproduction demonstrates.)
+
+Algorithm 2 — training-time based:
+    T_total_w = T_one_w * r + T_transmit_w
+    selected = { w : T_total_w <= T }
+  with eq 3.3: if accuracy gain < A, raise T to the smallest T_total among
+  the not-yet-selected workers (admitting at least one more).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence
+
+from .estimator import TimeEstimator, WorkerProfile
+
+
+class Selector:
+    name = "base"
+
+    def select(self, workers: Sequence[WorkerProfile]) -> List[str]:
+        raise NotImplementedError
+
+    def on_round_end(self, accuracy: float) -> None:
+        pass
+
+
+class AllSelector(Selector):
+    name = "all"
+
+    def select(self, workers):
+        return [w.worker_id for w in workers if not w.failed]
+
+
+class RandomSelector(Selector):
+    """The thesis' random-selection baseline (fig 4.3)."""
+    name = "random"
+
+    def __init__(self, k: int, seed: int = 0):
+        self.k = k
+        self.rng = random.Random(seed)
+
+    def select(self, workers):
+        alive = [w.worker_id for w in workers if not w.failed]
+        k = min(self.k, len(alive))
+        return self.rng.sample(alive, k)
+
+
+class RMinRMaxSelector(Selector):
+    """Algorithm 1."""
+    name = "rmin_rmax"
+
+    def __init__(self, estimator: TimeEstimator, model_bytes: int,
+                 rmin: float = 5.0, rmax: float = 5.0):
+        self.est = estimator
+        self.model_bytes = model_bytes
+        self.rmin = float(rmin)
+        self.rmax = float(rmax)
+        self._last_acc = 0.0
+
+    def select(self, workers):
+        alive = [w for w in workers if not w.failed]
+        if not alive:
+            return []
+        t_min = {w.worker_id: self.est.t_one(w) * self.rmin +
+                 self.est.t_transmit(w, self.model_bytes) for w in alive}
+        t_max = {w.worker_id: self.est.t_one(w) * self.rmax +
+                 self.est.t_transmit(w, self.model_bytes) for w in alive}
+        t_minimum = min(t_max.values())
+        return [w.worker_id for w in alive if t_min[w.worker_id] <= t_minimum]
+
+    def on_round_end(self, accuracy):  # eqs 3.1 / 3.2
+        prev, cur = self._last_acc, accuracy
+        self.rmin *= (prev + 1.0) / (cur + 1.0)
+        self.rmax *= (cur + 1.0) / (prev + 1.0)
+        self._last_acc = accuracy
+
+
+class TimeBasedSelector(Selector):
+    """Algorithm 2 (the thesis' winning policy)."""
+    name = "time_based"
+
+    def __init__(self, estimator: TimeEstimator, model_bytes: int,
+                 r: int = 10, T0: float = 0.0, accuracy_threshold: float = 0.01):
+        self.est = estimator
+        self.model_bytes = model_bytes
+        self.r = r
+        self.T = float(T0)
+        self.A = accuracy_threshold
+        self._last_acc = 0.0
+        self._last_selected: List[str] = []
+
+    def _t_total(self, w: WorkerProfile) -> float:
+        return self.est.t_one(w) * self.r + \
+            self.est.t_transmit(w, self.model_bytes)
+
+    def select(self, workers):
+        alive = [w for w in workers if not w.failed]
+        sel = [w.worker_id for w in alive if self._t_total(w) <= self.T]
+        self._pending = alive
+        self._last_selected = sel
+        return sel
+
+    def on_round_end(self, accuracy):   # eq 3.3
+        gain = accuracy - self._last_acc
+        if gain < self.A:
+            not_sel = [w for w in getattr(self, "_pending", [])
+                       if w.worker_id not in self._last_selected]
+            if not_sel:
+                self.T = min(self._t_total(w) for w in not_sel)
+        self._last_acc = accuracy
+
+
+def make_selector(kind: str, estimator: TimeEstimator, model_bytes: int,
+                  **kw) -> Selector:
+    if kind == "all":
+        return AllSelector()
+    if kind == "random":
+        return RandomSelector(k=kw.get("k", 3), seed=kw.get("seed", 0))
+    if kind == "rmin_rmax":
+        return RMinRMaxSelector(estimator, model_bytes,
+                                rmin=kw.get("rmin", 5.0),
+                                rmax=kw.get("rmax", 5.0))
+    if kind == "time_based":
+        return TimeBasedSelector(estimator, model_bytes,
+                                 r=kw.get("r", 10),
+                                 T0=kw.get("T0", 0.0),
+                                 accuracy_threshold=kw.get("A", 0.01))
+    raise ValueError(kind)

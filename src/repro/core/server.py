@@ -1,0 +1,263 @@
+"""Aggregation server (thesis §3.1/§3.3): worker registry, selection,
+sync/async merge gates, staleness bookkeeping, accuracy-over-time history.
+
+Synchronous mode (thesis §2.1.2.2): responses based on an older server
+version than current are *ignored*; a round aggregates when every selected
+worker responded (or the straggler timeout fires — our fault-tolerance
+extension, which the selection policy then treats as a failure signal).
+
+Asynchronous mode: every arriving response triggers an immediate aggregation
+(staleness-weighted, eq 2.4 family) and the responding worker is immediately
+re-dispatched — fast workers never wait for slow ones (§2.2.2.4 point 3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from . import aggregation as agg
+from .estimator import TimeEstimator, WorkerProfile
+from .events import EventLoop
+from .selection import Selector
+from .warehouse import DataWarehouse, Pointer
+from .worker import FLWorker, TrainResult
+
+
+@dataclass
+class HistoryPoint:
+    time: float
+    version: int
+    accuracy: float
+    n_updates: int
+    selected: int
+
+
+class AggregationServer:
+    def __init__(self, *, weights, loop: EventLoop, estimator: TimeEstimator,
+                 selector: Selector, eval_fn: Callable[[object], float],
+                 model_bytes: int, aggregator: str = "fedavg",
+                 mode: str = "sync", epochs_per_round: int = 10,
+                 max_rounds: int = 100, target_accuracy: Optional[float] = None,
+                 straggler_timeout_factor: float = 4.0,
+                 async_alpha: float = 1.0, async_stale_pow: float = 0.0,
+                 async_min_updates: int = 1, async_delta: bool = False,
+                 async_latest_table: bool = True):
+        assert mode in ("sync", "async")
+        self.address = "server://aggregator"
+        self.weights = weights
+        self.version = 0
+        self.loop = loop
+        self.est = estimator
+        self.selector = selector
+        self.eval_fn = eval_fn
+        self.model_bytes = model_bytes
+        self.aggregator = aggregator
+        self.mode = mode
+        self.epochs_per_round = epochs_per_round
+        self.max_rounds = max_rounds
+        self.target_accuracy = target_accuracy
+        self.straggler_timeout_factor = straggler_timeout_factor
+        self.async_alpha = async_alpha
+        self.async_stale_pow = async_stale_pow
+        # the thesis' `synchronous_federate_minimum_client` knob (Listing
+        # 4.1 line 3) applied to async: merge once >= this many responses
+        # are cached, so eq-2.4 staleness weighting averages across workers
+        self.async_min_updates = async_min_updates
+        # beyond-paper: merge worker *deltas* (w_new - w_base) into the
+        # current server weights instead of alpha-mixing absolute weights
+        # (FedBuff-style); staleness costs far less because concurrent
+        # updates compose additively.
+        self.async_delta = async_delta
+        # eq 2.2/2.4 faithful mode: aggregate over each worker's *latest*
+        # response; False = FedAsync-style single-arrival alpha-nudging
+        self.async_latest_table = async_latest_table
+        self._dispatch_base: Dict[str, object] = {}
+        self._latest: Dict[str, tuple] = {}   # async: worker -> latest response
+
+        self.workers: Dict[str, FLWorker] = {}
+        self.warehouse = DataWarehouse()
+        self.pointer = Pointer(self.address, self.warehouse.put(weights))
+        self._cache: List[agg.WorkerUpdate] = []
+        self._outstanding: set = set()
+        self._round_open = False
+        self._round_id = 0
+        self.history: List[HistoryPoint] = [
+            HistoryPoint(0.0, 0, float(eval_fn(weights)), 0, 0)]
+        self.done = False
+
+    # --- relationship (thesis §3.3.1) ---
+    def add_worker(self, worker: FLWorker):
+        self.workers[worker.worker_id] = worker
+        worker.add_server(self.pointer)
+
+    def remove_worker(self, worker_id: str):
+        self.workers.pop(worker_id, None)
+
+    def profiles(self) -> List[WorkerProfile]:
+        return [w.profile for w in self.workers.values()]
+
+    # --- main loop ---
+    def start(self):
+        self._dispatch_round()
+
+    def _accuracy(self) -> float:
+        return float(self.eval_fn(self.weights))
+
+    def _finish(self):
+        self.done = True
+        self.loop.stop()
+
+    def _dispatch_round(self):
+        if self.done:
+            return
+        if self.version >= self.max_rounds:
+            self._finish()
+            return
+        selected = self.selector.select(self.profiles())
+        self._round_id += 1
+        if not selected:
+            # nothing admitted (e.g. Alg2 with T=0): burn a no-op round so
+            # the policy's on_round_end can open the time budget (eq 3.3)
+            acc = self.history[-1].accuracy
+            self.selector.on_round_end(acc)
+            self.history.append(HistoryPoint(self.loop.now, self.version, acc,
+                                             0, 0))
+            self.version += 1
+            self.loop.schedule(1e-3, self._dispatch_round)
+            return
+        self._outstanding = set(selected)
+        self._round_open = True
+        base_version = self.version
+        rid = self._round_id
+        for wid in selected:
+            self._send_train(wid, base_version)
+        if self.mode == "sync":
+            # straggler timeout: aggregate with whatever arrived
+            t_max = max(self.est.t_one(self.workers[w].profile) *
+                        self.epochs_per_round +
+                        2 * self.est.t_transmit(self.workers[w].profile,
+                                                self.model_bytes)
+                        for w in selected)
+            self.loop.schedule(self.straggler_timeout_factor * max(t_max, 1e-3),
+                               self._round_timeout, rid)
+
+    def _send_train(self, wid: str, base_version: int):
+        w = self.workers.get(wid)
+        if w is None:
+            return
+        if self.async_delta:
+            self._dispatch_base[wid] = self.weights
+        w.train_async(self.pointer, self.weights, base_version,
+                      self.epochs_per_round, self.model_bytes,
+                      self._on_response)
+
+    # --- response handling (thesis §3.3.3 steps 8-9) ---
+    def _on_response(self, res: TrainResult):
+        if self.done:
+            return
+        w = self.workers.get(res.worker_id)
+        if w is None:
+            return
+        self.est.observe_training(res.worker_id,
+                                  res.t_train / max(res.epochs, 1))
+        staleness = self.version - res.base_version
+        if self.mode == "sync" and staleness > 0:
+            return  # thesis: sync ignores results that straddle an aggregation
+        weights = w.warehouse.redeem_ticket(res.weights_ticket)
+        if self.async_delta and self.mode == "async":
+            import jax
+            base = self._dispatch_base.get(res.worker_id, self.weights)
+            weights = jax.tree.map(
+                lambda cur, new, b: cur + (new - b), self.weights, weights, base)
+        self._outstanding.discard(res.worker_id)
+        if self.mode == "async":
+            if self.async_latest_table:
+                # eq 2.2/2.4: the async aggregate averages *each worker's
+                # latest response* (whatever server version it was based
+                # on), staleness-weighted at merge time.
+                self._latest[res.worker_id] = (weights, res.base_version,
+                                               max(res.n_batches, 1))
+                self._cache = [
+                    agg.WorkerUpdate(weights=wt,
+                                     staleness=self.version - bv,
+                                     n_data=nd)
+                    for (wt, bv, nd) in self._latest.values()]
+            else:
+                self._cache.append(agg.WorkerUpdate(
+                    weights=weights, staleness=staleness,
+                    n_data=max(res.n_batches, 1)))
+            if len(self._cache) >= self.async_min_updates:
+                self._aggregate()
+            else:
+                self._cache = []
+            if not self.done:
+                self._send_train(res.worker_id, self.version)
+        else:
+            self._cache.append(agg.WorkerUpdate(weights=weights,
+                                                staleness=staleness,
+                                                n_data=max(res.n_batches, 1)))
+            if not self._outstanding:
+                self._aggregate()
+                if not self.done:
+                    self._dispatch_round()
+
+    def _round_timeout(self, rid: int):
+        if self.done or rid != self._round_id or not self._round_open:
+            return
+        if self.mode == "sync" and self._outstanding:
+            # mark non-responders failed so selection stops picking them
+            for wid in list(self._outstanding):
+                if wid in self.workers:
+                    self.workers[wid].profile.failed = True
+            self._outstanding.clear()
+            if self._cache:
+                self._aggregate()
+            if not self.done:
+                self._dispatch_round()
+
+    def _aggregate(self):
+        if not self._cache:
+            return
+        self._round_open = False
+        merged = agg.AGGREGATORS[self.aggregator](self._cache)
+        # async merges are damped (FedAsync-style server mixing): a single
+        # worker's response nudges the global model instead of replacing it,
+        # scaled down further for stale responses (eq 2.4 family).
+        if self.mode == "async" and not self.async_latest_table:
+            stale = max(u.staleness for u in self._cache)
+            alpha = self.async_alpha * (1.0 + stale) ** (-self.async_stale_pow)
+        else:
+            alpha = 1.0
+        self.weights = agg.mix_into(self.weights, merged, alpha)
+        # the pointer names the *model*: overwrite in place, uid stays stable
+        # (workers' ACLs hold this pointer — thesis §3.3.1 step 7)
+        self.warehouse.put(self.weights, uid=self.pointer.uid)
+        n_upd = len(self._cache)
+        self._cache = []
+        self.version += 1
+        acc = self._accuracy()
+        self.selector.on_round_end(acc)
+        self.history.append(HistoryPoint(self.loop.now, self.version, acc,
+                                         n_upd, n_upd))
+        if self.target_accuracy is not None and acc >= self.target_accuracy:
+            self._finish()
+        elif self.version >= self.max_rounds:
+            self._finish()
+
+
+def run_sequential(*, weights, train_fn, eval_fn, data, per_batch_time: float,
+                   n_batches: int, epochs_per_round: int = 10,
+                   max_rounds: int = 100,
+                   target_accuracy: Optional[float] = None) -> List[HistoryPoint]:
+    """The thesis' sequential baseline: all data in one place, trained
+    single-threaded; simulated time = per-batch time x batches x epochs."""
+    history = [HistoryPoint(0.0, 0, float(eval_fn(weights)), 0, 0)]
+    t = 0.0
+    for r in range(max_rounds):
+        weights = train_fn(weights, data["x"], data["y"], epochs_per_round)
+        t += per_batch_time * n_batches * epochs_per_round
+        acc = float(eval_fn(weights))
+        history.append(HistoryPoint(t, r + 1, acc, 1, 1))
+        if target_accuracy is not None and acc >= target_accuracy:
+            break
+    return history

@@ -1,0 +1,90 @@
+"""FL worker (thesis §3.1.5/§3.3): holds a local model + data shard, obeys
+train instructions from its aggregation server, responds with weights via
+the warehouse's one-time-ticket channel.
+
+Numerics run for real (jitted JAX); durations are simulated from the same
+profile statistics the estimator sees — but with the *true* per-worker
+speed, so estimation error (eq 3.4 vs reality) is part of the simulation,
+exactly as in the thesis where estimates are refined by measurement.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from .estimator import WorkerProfile
+from .events import EventLoop
+from .warehouse import DataWarehouse, Pointer
+
+
+@dataclass
+class TrainResult:
+    worker_id: str
+    weights_ticket: str
+    base_version: int         # server version the worker trained from
+    epochs: int
+    n_batches: int
+    t_train: float            # measured training time (simulated clock)
+
+
+class FLWorker:
+    def __init__(self, worker_id: str, *, profile: WorkerProfile,
+                 data: Dict, train_fn: Callable, loop: EventLoop,
+                 per_batch_time: Optional[float] = None):
+        self.worker_id = worker_id
+        self.address = f"worker://{worker_id}"
+        self.profile = profile
+        self.data = data
+        self.train_fn = train_fn       # (params, x, y, epochs) -> params
+        self.loop = loop
+        self.warehouse = DataWarehouse()
+        self.server_pointers: List[Pointer] = []   # ACL (thesis §3.3.3 step 4)
+        self.busy = False
+        # ground-truth speed (may differ from the estimator's eq-3.4 guess)
+        self._per_batch_time = per_batch_time if per_batch_time is not None \
+            else 0.05 * 3.0 / max(profile.cpu_freq * profile.cpu_prop, 1e-9)
+
+    # --- relationship API (thesis §3.3.1) ---
+    def add_server(self, server_pointer: Pointer):
+        self.server_pointers.append(server_pointer)
+
+    def accepts(self, server_pointer: Pointer) -> bool:
+        return server_pointer in self.server_pointers
+
+    def true_t_one(self) -> float:
+        return self._per_batch_time * max(self.profile.n_batches, 0)
+
+    def true_t_transmit(self, model_bytes: int) -> float:
+        return model_bytes / max(self.profile.bandwidth, 1.0)
+
+    # --- training API (thesis §3.3.3) ---
+    def train_async(self, server_pointer: Pointer, weights, base_version: int,
+                    epochs: int, model_bytes: int,
+                    on_done: Callable[[TrainResult], None]):
+        """See class docstring."""
+        """Simulates: fetch server weights (T_transmit) -> train (T_one*r)
+        -> respond. ``on_done`` fires on the event loop at the right time."""
+        if not self.accepts(server_pointer) or self.profile.failed:
+            return  # silently drop: a failed/foreign request never responds
+        self.busy = True
+        t_fetch = self.true_t_transmit(model_bytes)
+        t_train = self.true_t_one() * epochs
+
+        def _finish():
+            if self.profile.failed:      # died mid-training
+                self.busy = False
+                return
+            if len(self.data["x"]):
+                new_weights = self.train_fn(weights, self.data["x"],
+                                            self.data["y"], epochs)
+            else:
+                new_weights = weights    # no local data: echo (setup-3 zeros)
+            uid = self.warehouse.put(new_weights)
+            ticket = self.warehouse.issue_ticket(uid)
+            self.busy = False
+            on_done(TrainResult(self.worker_id, ticket, base_version, epochs,
+                                self.profile.n_batches, t_train))
+        self.loop.schedule(t_fetch + t_train +
+                           self.true_t_transmit(model_bytes), _finish)

@@ -1,0 +1,2 @@
+from .synth import make_classification_dataset, federated_split
+from .lm import synthetic_token_batches

@@ -1,0 +1,105 @@
+"""Flash attention Pallas kernel (TPU target): causal / sliding-window /
+gemma2 logit-softcap, GQA via index-map head grouping (no materialised KV
+repeat). Online-softmax over KV blocks with (m, l, acc) carried in registers;
+probabilities never touch HBM.
+
+Block shapes are MXU-aligned (q-block x head_dim multiples of (8,128) tiles);
+K/V live in VMEM for the whole (b, h) program — sized for S <= 8k per the
+VMEM budget (the 4-d grid variant for longer S is the XLA chunked path's
+job; decode shapes never hit this kernel).
+
+Validated against ``ref.reference_attention`` in interpret mode on CPU
+(tests/test_kernels_flash.py sweeps shapes/dtypes/windows/softcaps).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_q, block_k,
+                 causal, window, softcap, seq_len_k):
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (BQ, D)
+    bq, d = q.shape
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, bq)
+
+    n_k = seq_len_k // block_k
+    hi = n_k
+    lo = 0
+    if causal:
+        hi = jnp.minimum(n_k, (qi + 1) * block_q // block_k +
+                         (1 if block_q % block_k else 0))
+        hi = jnp.asarray(pl.cdiv((qi + 1) * block_q, block_k), jnp.int32)
+    if window:
+        lo = jnp.maximum(0, (qi * block_q - window + 1) // block_k)
+
+    def body(i, carry):
+        m, l, acc = carry
+        kb = k_ref[0, 0, pl.ds(i * block_k, block_k), :].astype(jnp.float32)
+        vb = v_ref[0, 0, pl.ds(i * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = i * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = jnp.ones((bq, block_k), jnp.bool_)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jax.lax.dot_general(p, vb, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_new = acc * corr[:, None] + pv
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, a0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_k=128, interpret=False):
+    """q: (B,S,H,D); k,v: (B,T,Kv,D) with H % Kv == 0. Returns (B,S,H,D)."""
+    B, S, H, D = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    rep = H // Kv
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0
+    scale = 1.0 / math.sqrt(D)
+
+    qt = q.transpose(0, 2, 1, 3)     # (B,H,S,D)
+    kt = k.transpose(0, 2, 1, 3)     # (B,Kv,T,D)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (B, H, S // block_q)
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, softcap=softcap, seq_len_k=T)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, T, D), lambda b, h, i: (b, h // rep, 0, 0)),
+            pl.BlockSpec((1, 1, T, D), lambda b, h, i: (b, h // rep, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

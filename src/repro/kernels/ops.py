@@ -1,0 +1,52 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in this
+CPU container; on TPU backends the compiled kernels run natively.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import fedavg_agg as _fedavg
+from . import flash_attention as _fa
+from . import rwkv6_kernel as _wkv
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, interpret=interpret)
+
+
+def fedavg_aggregate(trees, weights, interpret=None):
+    """Weighted-average a list of parameter pytrees via the fused kernel.
+    ``weights``: (W,) (unnormalised OK)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(w.sum(), 1e-9)
+    leaves_list = [jax.tree.leaves(t) for t in trees]
+    treedef = jax.tree.structure(trees[0])
+    out_leaves = []
+    for leaf_group in zip(*leaves_list):
+        stacked = jnp.stack([l.reshape(-1).astype(jnp.float32)
+                             for l in leaf_group])
+        flat = _fedavg.fedavg_agg_flat(stacked, w, interpret=interpret)
+        out_leaves.append(flat.reshape(leaf_group[0].shape)
+                          .astype(leaf_group[0].dtype))
+    return jax.tree.unflatten(treedef, out_leaves)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(r, k, v, w, u, *, chunk=16, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _wkv.wkv_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)

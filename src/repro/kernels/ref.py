@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """O(S^2) attention. q:(B,S,H,D); k,v:(B,T,Kv,D)."""
+    B, S, H, D = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    rep = H // Kv
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / math.sqrt(D)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)
+    kpos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def reference_fedavg(stacked, weights):
+    """(W,N) x (W,) -> (N,)."""
+    return jnp.einsum("wn,w->n", stacked.astype(jnp.float32),
+                      weights.astype(jnp.float32)).astype(stacked.dtype)
+
+
+def reference_wkv(r, k, v, w, u):
+    """Sequential WKV recurrence (the ground truth the chunked forms must
+    match). r,k,v,w: (B,S,H,K); u: (H,K)."""
+    f32 = jnp.float32
+    B, S, H, K = r.shape
+    r, k, v, w = (t.astype(f32) for t in (r, k, v, w))
+    u = u.astype(f32)
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs                      # (B,H,K)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None, :, :, None] * kv)
+        state = state * wt[..., None] + kv
+        return state, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    s0 = jnp.zeros((B, H, K, K), f32)
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype)

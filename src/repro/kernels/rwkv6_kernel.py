@@ -1,0 +1,87 @@
+"""RWKV-6 WKV recurrence Pallas kernel (chunk-parallel, state in VMEM).
+
+The XLA chunked path's dominant cost is HBM traffic on the (C,C,K) pairwise
+decay tensor (see EXPERIMENTS.md §Roofline: rwkv6-3b train is memory-bound
+by ~50x). Here the pairwise tensor, the per-chunk state, and all decay
+cumsums live in VMEM scratch; HBM traffic reduces to the r/k/v/w/y streams.
+
+Grid = (B*H, n_chunks): the trailing grid dim iterates sequentially on TPU,
+so the (K,V) state scratch persists across chunk steps of the same (b,h)
+program — the cross-chunk recurrence carries in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, state_ref, *,
+                chunk):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0].astype(jnp.float32)        # (C, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)      # log decay, <= 0
+    u = u_ref[0].astype(jnp.float32)        # (1, K) bonus
+    C, K = r.shape
+
+    A = jnp.cumsum(lw, axis=0) - lw         # exclusive cumsum A_t
+    Atot = A[-1] + lw[-1]                   # (K,)
+
+    # intra-chunk pairwise decays: D[t,i,k] = A_t - A_i - lw_i for i < t
+    D = A[:, None, :] - A[None, :, :] - lw[None, :, :]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (C, C), 0) >
+           jax.lax.broadcasted_iota(jnp.int32, (C, C), 1))
+    E = jnp.where(tri[:, :, None], jnp.exp(D), 0.0)      # (C,C,K)
+    scores = jnp.einsum("tk,tik,ik->ti", r, E, k)
+    diag = jnp.sum(r * u * k, axis=-1)                   # (C,)
+    y = scores @ v + diag[:, None] * v
+
+    # inter-chunk: read state
+    state = state_ref[...]
+    y = y + (r * jnp.exp(A)) @ state
+
+    # state update
+    kdec = k * jnp.exp(Atot[None, :] - A - lw)
+    state_ref[...] = state * jnp.exp(Atot)[:, None] + \
+        jax.lax.dot_general(kdec, v, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def wkv_pallas(r, k, v, w, u, *, chunk: int = 16, interpret: bool = False):
+    """r,k,v,w: (B,S,H,K); w = per-channel decay in (0,1); u: (H,K).
+    Returns y (B,S,H,K). Matches ``repro.models.rwkv6.wkv_chunked`` with
+    zero initial state."""
+    B, S, H, K = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    lw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-12, 1.0))
+
+    def fold(t):  # (B,S,H,K) -> (B*H, S, K)
+        return t.transpose(0, 2, 1, 3).reshape(B * H, S, K)
+    rf, kf, vf, lwf = fold(r), fold(k), fold(v), fold(lw)
+    uf = jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, 1, K)
+
+    grid = (B * H, S // chunk)
+    spec = pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0))
+    y = pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((1, 1, K), lambda b, c: (b, 0, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B * H, S, K), r.dtype),
+        scratch_shapes=[pltpu.VMEM((K, K), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, lwf, uf)
+    return y.reshape(B, H, S, K).transpose(0, 2, 1, 3)

@@ -1,0 +1,143 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+``compiled.cost_analysis()`` provides per-device HLO FLOPs and bytes;
+collective bytes are parsed out of the (per-device SPMD) HLO text — result
+shapes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute — and converted to wire bytes with the standard ring
+models. Hardware constants: TPU v5e.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (one direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?[\w.\-]*\s*=\s*(\(?[a-z0-9_\[\],{}\s]+?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    per_op: List[dict] = field(default_factory=list)
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(o["wire_bytes"] for o in self.per_op)
+
+    def by_kind(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for o in self.per_op:
+            out[o["op"]] = out.get(o["op"], 0.0) + o["wire_bytes"]
+        return out
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Per-device wire-byte cost of every collective in the SPMD module."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done" in line:
+            continue
+        op = m.group(3)
+        result_bytes = _shape_bytes(m.group(2))
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            if gl:
+                g = len(gl.group(1).split(","))
+        if g <= 1 and op != "collective-permute":
+            continue
+        if op == "all-gather":
+            wire = result_bytes * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = result_bytes * (g - 1)
+        elif op == "all-reduce":
+            wire = 2 * result_bytes * (g - 1) / g
+        elif op == "all-to-all":
+            wire = result_bytes * (g - 1) / g
+        else:  # collective-permute
+            wire = result_bytes
+        stats.per_op.append({"op": op, "result_bytes": result_bytes,
+                             "group": g, "wire_bytes": wire})
+    return stats
+
+
+def roofline_terms(parsed: dict, xla_cost: dict | None = None) -> dict:
+    """Three roofline terms in seconds (per device = per chip).
+
+    ``parsed`` comes from ``hlo_cost.analyze`` (trip-count-aware); the raw
+    ``compiled.cost_analysis()`` numbers (which count while bodies once) are
+    attached for reference when provided.
+    """
+    flops = float(parsed.get("flops", 0.0))
+    bytes_hbm = float(parsed.get("hbm_bytes", 0.0))
+    wire = float(parsed.get("coll_wire_bytes", 0.0))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_hbm / HBM_BW
+    t_coll = wire / ICI_BW
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    out = {
+        "hlo_flops_per_device": flops,
+        "hbm_bytes_per_device": bytes_hbm,
+        "collective_wire_bytes_per_device": wire,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "collectives_by_kind": parsed.get("coll_by_kind", {}),
+        "n_collectives": parsed.get("n_collectives", 0),
+        "parser_warnings": parsed.get("warnings", []),
+    }
+    if xla_cost is not None:
+        out["xla_cost_analysis_flops"] = float(xla_cost.get("flops", 0.0))
+        out["xla_cost_analysis_bytes"] = float(xla_cost.get("bytes accessed", 0.0))
+    return out
+
+
+def memory_summary(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    return {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_estimate_bytes": int(ma.argument_size_in_bytes +
+                                   ma.output_size_in_bytes +
+                                   ma.temp_size_in_bytes -
+                                   ma.alias_size_in_bytes),
+    }

@@ -1,0 +1,102 @@
+"""Abstract input construction for every (arch x shape) dry-run cell.
+
+``input_specs`` returns weak-type-correct ``jax.ShapeDtypeStruct`` stand-ins
+with NamedShardings attached — shardable, no device allocation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs import SHAPES, get_config
+from repro.models import init_params, init_decode_state
+from repro.models.layers import COMPUTE_DTYPE
+from repro.parallel import batch_specs, param_specs, state_specs, to_named_tree
+
+
+def _sds(tree, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings)
+
+
+def abstract_params(cfg, mesh):
+    shapes = jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    specs = param_specs(cfg, shapes, mesh)
+    return _sds(shapes, to_named_tree(mesh, specs))
+
+
+def abstract_opt_state(cfg, mesh, optimizer):
+    pshapes = jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                             jax.random.PRNGKey(0))
+    oshapes = jax.eval_shape(optimizer.init, pshapes)
+    from jax.sharding import PartitionSpec as P
+
+    # mirror param specs for master/m/v; scalars replicated
+    full = {}
+    for k, v in oshapes.items():
+        if k in ("master", "m", "v", "mom"):
+            full[k] = param_specs(cfg, v, mesh)
+        else:
+            full[k] = jax.tree.map(lambda l: P(), v)
+    return _sds(oshapes, to_named_tree(mesh, full))
+
+
+def abstract_batch(cfg, mesh, shape_name):
+    info = SHAPES[shape_name]
+    B, S = info["global_batch"], info["seq_len"]
+    if info["kind"] == "decode":
+        S_in = 1
+    else:
+        S_in = S
+    batch = {}
+    if cfg.embeds_input:
+        batch["embeds"] = jax.ShapeDtypeStruct((B, S_in, cfg.d_model), COMPUTE_DTYPE)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S_in), jnp.int32)
+    if info["kind"] == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S_in), jnp.int32)
+    specs = batch_specs(cfg, batch, mesh)
+    return _sds(batch, to_named_tree(mesh, specs))
+
+
+def abstract_decode_state(cfg, mesh, shape_name):
+    info = SHAPES[shape_name]
+    B, S = info["global_batch"], info["seq_len"]
+    shapes = jax.eval_shape(
+        functools.partial(init_decode_state, cfg, B, S))
+    specs = state_specs(cfg, shapes, mesh, B)
+    return _sds(shapes, to_named_tree(mesh, specs))
+
+
+def input_specs(arch: str, shape_name: str, mesh, optimizer=None):
+    """Full abstract input pytree for the given cell. Returns (kind, inputs)."""
+    cfg = get_config(arch)
+    info = SHAPES[shape_name]
+    kind = info["kind"]
+    if kind == "train":
+        optimizer = optimizer or optim.adamw()
+        return kind, {
+            "params": abstract_params(cfg, mesh),
+            "opt_state": abstract_opt_state(cfg, mesh, optimizer),
+            "batch": abstract_batch(cfg, mesh, shape_name),
+        }
+    if kind == "prefill":
+        return kind, {
+            "params": abstract_params(cfg, mesh),
+            "batch": abstract_batch(cfg, mesh, shape_name),
+        }
+    if kind == "decode":
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        return kind, {
+            "params": abstract_params(cfg, mesh),
+            "state": abstract_decode_state(cfg, mesh, shape_name),
+            "batch": abstract_batch(cfg, mesh, shape_name),
+            "cur_pos": jax.ShapeDtypeStruct(
+                (), jnp.int32, sharding=NamedSharding(mesh, P())),
+        }
+    raise ValueError(kind)

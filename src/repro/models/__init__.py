@@ -1,0 +1,2 @@
+from .transformer import (forward, init_params, init_decode_state, loss_fn,
+                          train_step, prefill_step, serve_step)

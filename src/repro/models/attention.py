@@ -1,0 +1,243 @@
+"""Attention: GQA with RoPE, sliding windows, gemma2 logit soft-capping.
+
+Three execution paths:
+  * ``mha_chunked``   — memory-efficient blockwise attention (online softmax)
+                        in pure jnp; used for train/prefill under XLA. Block
+                        bounds are static per query-block, so causal and
+                        sliding-window structure statically skips KV blocks
+                        (no masked-out FLOPs outside the diagonal band).
+  * ``decode_attention`` — single-token attention over a (ring-buffered) KV
+                        cache; reductions stay sharded over the cache's seq
+                        axis under GSPMD.
+  * Pallas flash attention (``repro.kernels.flash_attention``) — TPU target,
+    selected with ``cfg.attn_impl='pallas'`` (interpret mode on CPU).
+
+Weights are kept 3-D ``(d_model, heads, head_dim)`` so the head axis has a
+clean mesh sharding.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, _dense_init
+
+NEG_INF = -1e30
+
+
+def attn_init(rng, d_model: int, n_heads: int, n_kv: int, head_dim: int):
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    return {
+        "wq": _dense_init(kq, (d_model, n_heads, head_dim)),
+        "wk": _dense_init(kk, (d_model, n_kv, head_dim)),
+        "wv": _dense_init(kv, (d_model, n_kv, head_dim)),
+        "wo": _dense_init(ko, (n_heads, head_dim, d_model), in_axis=1),
+    }
+
+
+def _repeat_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """(B,T,Kv,hd) -> (B,T,H,hd) by repeating each kv head H/Kv times."""
+    B, T, Kv, hd = k.shape
+    if Kv == n_heads:
+        return k
+    rep = n_heads // Kv
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, T, Kv, rep, hd)).reshape(B, T, n_heads, hd)
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, softcap_val=0.0,
+                    q_offset=0):
+    """O(S^2)-memory reference. q:(B,S,H,hd) k,v:(B,T,Kv,hd)."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s / math.sqrt(hd)
+    if softcap_val:
+        s = softcap_val * jnp.tanh(s / softcap_val)
+    qpos = jnp.arange(S) + q_offset
+    kpos = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+    return out
+
+
+def mha_chunked(q, k, v, *, causal=True, window=0, softcap_val=0.0,
+                q_block=512, kv_block=512, q_offset=0):
+    """Blockwise attention with online softmax; never materialises (S,T).
+
+    Python loop over query blocks (static bounds) -> for each, ``lax.scan``
+    over the statically-required KV blocks only. FLOPs therefore track the
+    causal/windowed band instead of the full square.
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    q_block = min(q_block, S)
+    kv_block = min(kv_block, T)
+    assert S % q_block == 0 and T % kv_block == 0, (S, q_block, T, kv_block)
+    scale = 1.0 / math.sqrt(hd)
+    kpos_all = jnp.arange(T, dtype=jnp.int32)
+
+    out_blocks = []
+    for qs in range(0, S, q_block):
+        q_abs_lo, q_abs_hi = q_offset + qs, q_offset + qs + q_block
+        lo = 0
+        hi = T
+        if causal:
+            hi = min(T, q_abs_hi)
+        if window:
+            lo = max(0, q_abs_lo - window + 1)
+        lo = (lo // kv_block) * kv_block
+        hi = -(-hi // kv_block) * kv_block
+        hi = min(hi, T)
+        nblk = (hi - lo) // kv_block
+        qb = q[:, qs:qs + q_block]                      # (B,qb,H,hd)
+        qpos = (jnp.arange(q_block, dtype=jnp.int32) + q_abs_lo)
+
+        m0 = jnp.full((B, H, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_block), jnp.float32)
+        a0 = jnp.zeros((B, H, q_block, hd), jnp.float32)
+
+        def body(carry, bi):
+            m, l, acc = carry
+            # dynamic-slice the KV blocks out of the full tensors (closed
+            # over) instead of feeding stacked slices through scan xs — this
+            # avoids materialising staggered copies of K/V per query block.
+            start = bi * kv_block
+            kb_ = jax.lax.dynamic_slice_in_dim(k, start, kv_block, axis=1)
+            vb_ = jax.lax.dynamic_slice_in_dim(v, start, kv_block, axis=1)
+            kp_ = start + jnp.arange(kv_block, dtype=jnp.int32)
+            kb_r = _repeat_kv(kb_, H)
+            vb_r = _repeat_kv(vb_, H)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb_r,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap_val:
+                s = softcap_val * jnp.tanh(s / softcap_val)
+            msk = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                msk &= qpos[:, None] >= kp_[None, :]
+            if window:
+                msk &= (qpos[:, None] - kp_[None, :]) < window
+            s = jnp.where(msk[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vb_r.dtype), vb_r,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        # flash-attention semantics: scores/probs are *recomputed* in the
+        # backward pass (checkpoint), so per-step residuals are just the
+        # small (m,l,acc) carry — not the (qb,kb) probability matrices.
+        idxs = jnp.arange(lo // kv_block, hi // kv_block, dtype=jnp.int32)
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), (m0, l0, a0), idxs)
+        ob = acc / jnp.maximum(l, 1e-30)[..., None]
+        out_blocks.append(ob.swapaxes(1, 2))            # (B,qb,H,hd)
+    return jnp.concatenate(out_blocks, axis=1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (supports ring buffers for sliding-window archs)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, cache_len: int, n_kv: int, head_dim: int,
+                  dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((batch, cache_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, n_kv, head_dim), dtype),
+        # global position held by each slot; -1 = empty
+        "slot_pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def cache_write(cache, k_new, v_new, pos):
+    """Write one step (B,1,Kv,hd) at global position ``pos`` (traced scalar)."""
+    C = cache["k"].shape[1]
+    idx = jnp.mod(pos, C)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, idx, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, idx, 0, 0))
+    sp = jax.lax.dynamic_update_slice(cache["slot_pos"],
+                                      pos[None].astype(jnp.int32), (idx,))
+    return {"k": k, "v": v, "slot_pos": sp}
+
+
+def decode_attention(q, cache, *, window=0, softcap_val=0.0, cur_pos=None):
+    """q: (B,1,H,hd) attends over the cache. Mask from slot positions, so the
+    same code serves full caches and ring buffers."""
+    B, S1, H, hd = q.shape
+    k, v, slot_pos = cache["k"], cache["v"], cache["slot_pos"]
+    kr = _repeat_kv(k, H)
+    vr = _repeat_kv(v, H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    if softcap_val:
+        s = softcap_val * jnp.tanh(s / softcap_val)
+    valid = slot_pos >= 0
+    if cur_pos is not None:
+        valid &= slot_pos <= cur_pos
+        if window:
+            valid &= (cur_pos - slot_pos) < window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vr.dtype), vr)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Full attention block application
+# ---------------------------------------------------------------------------
+
+def attn_apply(params, x, *, cfg, window: int = 0, rope_theta=None,
+               cache=None, cur_pos=None, impl: Optional[str] = None):
+    """x: (B,S,D). If ``cache`` is provided, runs one decode step and returns
+    (out, new_cache); else runs train/prefill and returns (out, (k,v)).
+    ``window``: 0 = full attention (callers resolve gemma2 local/global)."""
+    dt = x.dtype
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+
+    if cache is not None:
+        pos = jnp.broadcast_to(cur_pos, (B, S))
+        q = apply_rope(q, pos, theta)
+        k = apply_rope(k, pos, theta)
+        new_cache = cache_write(cache, k, v, cur_pos)
+        out = decode_attention(q, new_cache, window=window,
+                               softcap_val=cfg.attn_softcap, cur_pos=cur_pos)
+        o = jnp.einsum("bshk,hkd->bsd", out.astype(dt), params["wo"].astype(dt))
+        return o, new_cache
+
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q = apply_rope(q, pos, theta)
+    k = apply_rope(k, pos, theta)
+    from repro.parallel import constrain_qkv
+    q, k, v = constrain_qkv(q, k, v)
+    impl = impl or cfg.attn_impl
+    if impl == "xla":
+        out = mha_chunked(q, k, v, causal=True, window=window,
+                          softcap_val=cfg.attn_softcap)
+    elif impl in ("pallas", "pallas_interpret"):
+        from repro.kernels import flash_attention as fa
+        out = fa.flash_attention(q, k, v, causal=True, window=window,
+                                 softcap=cfg.attn_softcap,
+                                 interpret=(impl == "pallas_interpret"))
+    else:
+        raise ValueError(impl)
+    # bf16 partial sums: the head contraction is sharded over `model`, so the
+    # cross-shard psum moves bf16 instead of f32 partials
+    o = jnp.einsum("bshk,hkd->bsd", out.astype(dt), params["wo"].astype(dt),
+                   preferred_element_type=dt)
+    return o, (k, v)

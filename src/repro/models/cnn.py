@@ -1,0 +1,80 @@
+"""The thesis' experiment models (§4.2.4, Listing 4.1) in JAX: a small CNN
+for MNIST-class 28x28x1 inputs (conv16-pool-conv32-pool-fc10, Adam lr .01)
+and a CIFAR-class 32x32x3 variant (conv16-conv32-pool-fc120-fc84-fc10, SGD).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_cnn import CNNConfig
+
+
+def _conv(x, w, b, stride=1, padding="SAME"):
+    y = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _maxpool(x, k=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+def init_cnn(rng, cfg: CNNConfig):
+    ks = jax.random.split(rng, 6)
+    c, hw = cfg.channels, cfg.image_hw
+    he = lambda k, shape, fan: jax.random.normal(k, shape, jnp.float32) * \
+        jnp.sqrt(2.0 / fan)
+    p = {
+        "c1w": he(ks[0], (5, 5, c, cfg.conv1), 25 * c),
+        "c1b": jnp.zeros((cfg.conv1,)),
+        "c2w": he(ks[1], (5, 5, cfg.conv1, cfg.conv2), 25 * cfg.conv1),
+        "c2b": jnp.zeros((cfg.conv2,)),
+    }
+    flat = (hw // 4) * (hw // 4) * cfg.conv2
+    p["fw"] = he(ks[2], (flat, cfg.n_classes), flat)
+    p["fb"] = jnp.zeros((cfg.n_classes,))
+    return p
+
+
+def cnn_logits(params, x):
+    """x: (B, H, W, C) float32 in [0,1]."""
+    h = jax.nn.relu(_conv(x, params["c1w"], params["c1b"]))
+    h = _maxpool(h)
+    h = jax.nn.relu(_conv(h, params["c2w"], params["c2b"]))
+    h = _maxpool(h)
+    h = h.reshape(h.shape[0], -1)
+    return h @ params["fw"] + params["fb"]
+
+
+def cnn_loss(params, batch):
+    logits = cnn_logits(params, batch["x"])
+    labels = batch["y"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "epochs"))
+def cnn_sgd_train(params, x, y, lr: float = 0.01, epochs: int = 1):
+    """``epochs`` full-batch Adam-free SGD passes (deterministic, cheap)."""
+    def one(params, _):
+        g = jax.grad(cnn_loss)(params, {"x": x, "y": y})
+        params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+        return params, None
+    params, _ = jax.lax.scan(one, params, None, length=epochs)
+    return params
+
+
+@jax.jit
+def cnn_accuracy(params, x, y):
+    pred = jnp.argmax(cnn_logits(params, x), axis=-1)
+    return jnp.mean((pred == y).astype(jnp.float32))
+
+
+def model_nbytes(params) -> int:
+    return int(sum(p.size * p.dtype.itemsize for p in jax.tree.leaves(params)))

@@ -1,0 +1,154 @@
+"""Mamba-2 (SSD) block [arXiv:2405.21060] for the zamba2 hybrid backbone.
+
+Scalar-per-head data-dependent decay, outer-product state (head_dim x state),
+causal depthwise conv stem. Chunk-parallel scan for train/prefill; O(1)-state
+decode step.
+
+Projections are stored *split* (z / x / B / C / dt) rather than as one fused
+``in_proj`` so each weight has a clean mesh sharding (the fused layout's
+segment boundaries do not align with a 16-way shard). The depthwise conv is
+likewise split into an x-conv and a BC-conv — depthwise convs are per-channel
+independent, so this is mathematically identical to convolving the
+concatenation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+CONV_K = 4
+
+
+def mamba2_init(rng, d_model: int, *, expand: int = 2, head_dim: int = 64,
+                n_state: int = 64):
+    d_in = expand * d_model
+    nh = d_in // head_dim
+    ks = jax.random.split(rng, 8)
+    return {
+        "wz": _dense_init(ks[0], (d_model, d_in)),
+        "wx": _dense_init(ks[1], (d_model, d_in)),
+        "wB": _dense_init(ks[2], (d_model, n_state)),
+        "wC": _dense_init(ks[3], (d_model, n_state)),
+        "wdt": _dense_init(ks[4], (d_model, nh)),
+        "conv_x_w": jax.random.normal(ks[5], (CONV_K, d_in), jnp.float32) * 0.2,
+        "conv_x_b": jnp.zeros((d_in,), jnp.float32),
+        "conv_bc_w": jax.random.normal(ks[6], (CONV_K, 2 * n_state), jnp.float32) * 0.2,
+        "conv_bc_b": jnp.zeros((2 * n_state,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "out_proj": _dense_init(ks[7], (d_in, d_model)),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv. x:(B,S,C); w:(K,C). Returns (y, new_state)."""
+    B, S, C = x.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, CONV_K - 1, C), x.dtype)
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + S] * w[i].astype(x.dtype) for i in range(CONV_K))
+    y = jax.nn.silu(y + b.astype(x.dtype))
+    return y, xp[:, -(CONV_K - 1):]
+
+
+def ssd_chunked(xh, Bm, Cm, dt, la, s0=None, chunk: int = 32):
+    """SSD scan. xh:(B,S,nh,hd); Bm,Cm:(B,S,n); dt,la:(B,S,nh) with la=log decay.
+    Returns (y, final_state (B,nh,hd,n))."""
+    Bsz, S, nh, hd = xh.shape
+    n = Bm.shape[-1]
+    C = min(chunk, S)
+    assert S % C == 0
+    nc = S // C
+    f32 = jnp.float32
+    # NOTE(§Perf, refuted): keeping these streams bf16 measured *worse* on
+    # the CPU-lowered HLO (extra converts outweigh the savings there); the
+    # fp32 upcast stays. The Pallas-style fix belongs in a kernel.
+    xc = xh.astype(f32).reshape(Bsz, nc, C, nh, hd).transpose(1, 0, 3, 2, 4)  # (n,B,h,C,hd)
+    bc = Bm.astype(f32).reshape(Bsz, nc, C, n).transpose(1, 0, 2, 3)          # (n,B,C,n)
+    cc = Cm.astype(f32).reshape(Bsz, nc, C, n).transpose(1, 0, 2, 3)
+    dtc = dt.astype(f32).reshape(Bsz, nc, C, nh).transpose(1, 0, 3, 2)        # (n,B,h,C)
+    lac = la.astype(f32).reshape(Bsz, nc, C, nh).transpose(1, 0, 3, 2)
+    if s0 is None:
+        s0 = jnp.zeros((Bsz, nh, hd, n), f32)
+    tri = jnp.tril(jnp.ones((C, C), bool))                                    # i <= t
+
+    def body(state, xs):
+        xb, bb, cb, dtb, lab = xs
+        A = jnp.cumsum(lab, axis=-1)                     # inclusive (B,h,C)
+        Atot = A[:, :, -1]
+        # intra: decay(i->t) = exp(A_t - A_i), i<=t
+        G = A[:, :, :, None] - A[:, :, None, :]
+        G = jnp.where(tri[None, None], G, -jnp.inf)
+        cb_dot_bb = jnp.einsum("btn,bin->bti", cb, bb)   # (B,C,C)
+        scores = jnp.exp(G) * cb_dot_bb[:, None] * dtb[:, :, None, :]
+        y = jnp.einsum("bhti,bhid->bhtd", scores, xb)
+        # inter: read carry
+        y = y + jnp.exp(A)[..., None] * jnp.einsum("bhdn,btn->bhtd", state, cb)
+        # state update
+        wgt = jnp.exp(Atot[:, :, None] - A) * dtb        # (B,h,C)
+        state = state * jnp.exp(Atot)[..., None, None] + \
+            jnp.einsum("bhi,bhid,bin->bhdn", wgt, xb, bb)
+        return state, y
+
+    state, ys = jax.lax.scan(body, s0, (xc, bc, cc, dtc, lac))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(Bsz, S, nh, hd)
+    return y.astype(xh.dtype), state
+
+
+def ssd_step(xh, Bm, Cm, dt, la, state):
+    """One decode step. xh:(B,nh,hd); Bm,Cm:(B,n); dt,la:(B,nh)."""
+    f32 = jnp.float32
+    xh, Bm, Cm, dt, la = (t.astype(f32) for t in (xh, Bm, Cm, dt, la))
+    decay = jnp.exp(la)
+    state = state * decay[..., None, None] + \
+        jnp.einsum("bh,bhd,bn->bhdn", dt, xh, Bm)
+    y = jnp.einsum("bhdn,bn->bhd", state, Cm)
+    return y, state
+
+
+def mamba2_apply(params, x, *, expand: int = 2, head_dim: int = 64,
+                 n_state: int = 64, state=None, chunk: int = 32):
+    """x:(B,S,D). state: None or dict(conv_x, conv_bc, ssm)."""
+    dt_ = x.dtype
+    B, S, D = x.shape
+    d_in = expand * D
+    nh = d_in // head_dim
+    z = x @ params["wz"].astype(dt_)
+    xr = x @ params["wx"].astype(dt_)
+    Bm = x @ params["wB"].astype(dt_)
+    Cm = x @ params["wC"].astype(dt_)
+    dt_raw = x @ params["wdt"].astype(dt_)
+
+    cx = state["conv_x"] if state is not None else None
+    cbc = state["conv_bc"] if state is not None else None
+    xr, new_cx = _causal_conv(xr, params["conv_x_w"], params["conv_x_b"], cx)
+    bc = jnp.concatenate([Bm, Cm], axis=-1)
+    bc, new_cbc = _causal_conv(bc, params["conv_bc_w"], params["conv_bc_b"], cbc)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                           params["dt_bias"].astype(jnp.float32))     # (B,S,nh)
+    la = -dt_v * jnp.exp(params["a_log"].astype(jnp.float32))          # log decay
+    xh = xr.reshape(B, S, nh, head_dim)
+
+    if state is not None and S == 1:
+        y, ssm = ssd_step(xh[:, 0], Bm[:, 0], Cm[:, 0], dt_v[:, 0], la[:, 0],
+                          state["ssm"])
+        y = y[:, None]
+    else:
+        s0 = state["ssm"] if state is not None else None
+        y, ssm = ssd_chunked(xh, Bm, Cm, dt_v, la, s0, chunk=chunk)
+    y = y + params["d_skip"].astype(y.dtype)[None, None, :, None] * xh.astype(y.dtype)
+    y = y.reshape(B, S, d_in)
+
+    # gated RMSNorm then out-projection
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * params["norm_scale"].astype(jnp.float32)
+    out = y.astype(dt_) @ params["out_proj"].astype(dt_)
+    new_state = {"conv_x": new_cx, "conv_bc": new_cbc, "ssm": ssm}
+    return out, new_state

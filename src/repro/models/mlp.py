@@ -1,0 +1,65 @@
+"""MLP classifier used by the FL simulation benchmarks.
+
+The container is single-core; XLA-CPU convolutions run ~0.6 GFLOP/s there,
+which makes the thesis' CNN unusable for hundreds of simulated FL rounds.
+Dense matmuls hit oneDNN and are ~50x faster, so the benchmark harness runs
+this same-API MLP while the faithful CNN (models/cnn.py) is validated in the
+unit tests. The FL quantities under study (time-to-accuracy across
+heterogeneous workers) do not depend on the classifier family.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp(rng, *, in_dim: int, hidden: int = 128, n_classes: int = 10):
+    k1, k2 = jax.random.split(rng)
+    he = lambda k, shape, fan: jax.random.normal(k, shape, jnp.float32) * \
+        jnp.sqrt(2.0 / fan)
+    return {
+        "w1": he(k1, (in_dim, hidden), in_dim),
+        "b1": jnp.zeros((hidden,)),
+        "w2": he(k2, (hidden, n_classes), hidden),
+        "b2": jnp.zeros((n_classes,)),
+    }
+
+
+def mlp_logits(params, x):
+    h = x.reshape(x.shape[0], -1)
+    h = jax.nn.relu(h @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def mlp_loss(params, x, y):
+    logits = mlp_logits(params, x)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "epochs", "mb"))
+def mlp_sgd_train(params, x, y, lr: float = 0.1, epochs: int = 1, mb: int = 32):
+    """``epochs`` deterministic minibatch-SGD passes."""
+    n = x.shape[0]
+    nb = max(n // mb, 1)
+    xb = x[:nb * mb].reshape(nb, mb, *x.shape[1:])
+    yb = y[:nb * mb].reshape(nb, mb)
+
+    def epoch(params, _):
+        def step(p, batch):
+            bx, by = batch
+            g = jax.grad(mlp_loss)(p, bx, by)
+            return jax.tree.map(lambda a, b: a - lr * b, p, g), None
+        params, _ = jax.lax.scan(step, params, (xb, yb))
+        return params, None
+    params, _ = jax.lax.scan(epoch, params, None, length=epochs)
+    return params
+
+
+@jax.jit
+def mlp_accuracy(params, x, y):
+    pred = jnp.argmax(mlp_logits(params, x), axis=-1)
+    return jnp.mean((pred == y).astype(jnp.float32))

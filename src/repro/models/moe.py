@@ -1,0 +1,78 @@
+"""Mixture-of-Experts FFN with GShard-style capacity dispatch.
+
+Tokens are grouped, routed top-k, and dispatched to per-expert capacity
+buffers via one-hot einsums (the standard TPU-friendly formulation: dense
+matmuls, no data-dependent shapes, drops overflow tokens). Expert compute is
+``E x capacity`` tokens = ``top_k * capacity_factor * N`` — active-param
+FLOPs, not ``E x N``.
+
+Sharding: expert-parallel over the ``model`` mesh axis when ``E`` divides the
+axis (phi3.5: 16 experts), else tensor-parallel over expert ``d_ff``
+(mixtral: 8 experts).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+
+def moe_init(rng, d_model: int, d_ff: int, n_experts: int):
+    kr, k1, k2, k3 = jax.random.split(rng, 4)
+    return {
+        "router": _dense_init(kr, (d_model, n_experts)),
+        "wi_gate": _dense_init(k1, (n_experts, d_model, d_ff), in_axis=1),
+        "wi_up": _dense_init(k2, (n_experts, d_model, d_ff), in_axis=1),
+        "wo": _dense_init(k3, (n_experts, d_ff, d_model), in_axis=1),
+    }
+
+
+def moe_apply(params, x, *, top_k: int, capacity_factor: float = 1.25,
+              group_size: int = 2048):
+    """x: (B,S,D) -> (out, aux_loss)."""
+    dt = x.dtype
+    B, S, D = x.shape
+    N = B * S
+    xf = x.reshape(N, D)
+    E = params["router"].shape[1]
+    G = min(group_size, N)
+    assert N % G == 0, (N, G)
+    ng = N // G
+    xg = xf.reshape(ng, G, D)
+
+    logits = jnp.einsum("gsd,de->gse", xg, params["router"].astype(dt),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                       # (g,s,E)
+    gate_w, gate_idx = jax.lax.top_k(probs, top_k)                # (g,s,k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(G * top_k * capacity_factor / E)
+    cap = max(8, -(-cap // 8) * 8)
+    cap = min(cap, G)
+
+    oh = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)           # (g,s,k,E)
+    # choice-major priority: all 1st choices before any 2nd choice
+    ohp = oh.transpose(0, 2, 1, 3).reshape(ng, top_k * G, E)
+    pos = jnp.cumsum(ohp, axis=1) * ohp - 1.0                     # slot id or -1
+    keep = (pos >= 0) & (pos < cap)
+    slot = jax.nn.one_hot(pos.clip(0, cap - 1), cap, dtype=dt)
+    slot = slot * keep[..., None].astype(dt)                      # (g,kS,E,C)
+    slot = jax.lax.stop_gradient(
+        slot.reshape(ng, top_k, G, E, cap).transpose(0, 2, 1, 3, 4))
+
+    dispatch = slot.sum(2)                                        # (g,s,E,C)
+    combine = jnp.einsum("gskec,gsk->gsec", slot, gate_w.astype(dt))
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)               # (g,E,C,D)
+    h_gate = jnp.einsum("gecd,edf->gecf", xe, params["wi_gate"].astype(dt))
+    h_up = jnp.einsum("gecd,edf->gecf", xe, params["wi_up"].astype(dt))
+    h = jax.nn.silu(h_gate) * h_up
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(dt))
+    y = jnp.einsum("gsec,gecd->gsd", combine, ye)
+
+    # Switch-style load-balance aux loss
+    me = probs.mean(axis=(0, 1))                                  # (E,)
+    ce = oh[:, :, 0, :].mean(axis=(0, 1))                         # 1st-choice load
+    aux = E * jnp.sum(me * ce)
+    return y.reshape(B, S, D), aux

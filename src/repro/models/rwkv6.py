@@ -1,0 +1,197 @@
+"""RWKV-6 "Finch" block [arXiv:2404.05892]: token-shift with data-dependent
+lerp (ddlerp), per-channel data-dependent decay, and the WKV linear-attention
+recurrence. Chunked-parallel formulation for train/prefill (scan over chunks;
+pairwise in-chunk decays stay O(C^2 K) per step), O(1)-state decode step.
+
+The chunked math here is also the reference oracle for the Pallas kernel in
+``repro.kernels.rwkv6_kernel``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def rwkv6_init(rng, d_model: int, d_ff: int, n_heads: int, head_dim: int):
+    ks = jax.random.split(rng, 12)
+    d = d_model
+    return {
+        "tm": {
+            "mu_base": jnp.full((d,), 0.5, jnp.float32),
+            "mu": jnp.full((5, d), 0.5, jnp.float32),
+            "mix_w1": _dense_init(ks[0], (d, 5, LORA_MIX)) * 0.1,
+            "mix_w2": _dense_init(ks[1], (5, LORA_MIX, d), in_axis=1) * 0.1,
+            "wr": _dense_init(ks[2], (d, d)),
+            "wk": _dense_init(ks[3], (d, d)),
+            "wv": _dense_init(ks[4], (d, d)),
+            "wg": _dense_init(ks[5], (d, d)),
+            "wo": _dense_init(ks[6], (d, d)),
+            "decay_base": jnp.full((d,), -4.0, jnp.float32),
+            "decay_w1": _dense_init(ks[7], (d, LORA_DECAY)) * 0.1,
+            "decay_w2": _dense_init(ks[8], (LORA_DECAY, d)) * 0.1,
+            "bonus": jnp.full((n_heads, head_dim), 0.5, jnp.float32),
+            "ln_x": jnp.ones((d,), jnp.float32),
+        },
+        "cm": {
+            "mu_k": jnp.full((d,), 0.5, jnp.float32),
+            "mu_r": jnp.full((d,), 0.5, jnp.float32),
+            "wk": _dense_init(ks[9], (d, d_ff)),
+            "wv": _dense_init(ks[10], (d_ff, d)),
+            "wr": _dense_init(ks[11], (d, d)),
+        },
+    }
+
+
+def _token_shift(x, shift_state):
+    """x:(B,S,D); shift_state:(B,1,D) -> previous token's activations."""
+    if shift_state is None:
+        shift_state = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([shift_state, x[:, :-1]], axis=1)
+
+
+def wkv_chunked(r, k, v, w, u, s0=None, chunk: int = 64):
+    """WKV recurrence, chunk-parallel.
+
+    r,k,v: (B,S,H,K); w: per-channel decay in (0,1), same shape; u: (H,K).
+    y_t = sum_{i<t} [r_t . prod_{j=i+1}^{t-1} w_j . k_i] v_i
+          + [r_t . (u * k_t)] v_t   (+ carry from previous chunks)
+    Returns (y, final_state) with state (B,H,K,K_v=K).
+    """
+    B, S, H, K = r.shape
+    C = min(chunk, S)
+    assert S % C == 0, (S, C)
+    nc = S // C
+    f32 = jnp.float32
+
+    # RWKV6 head counts (40) don't divide the model axis, but the per-head
+    # channel dim K (64) does: shard the decay/key channel over `model` so
+    # the dominant (B,H,C,C,K) pairwise-decay traffic splits 16-ways.
+    # Cross-channel reductions (scores einsum) psum small (C,C) tiles.
+    def _shard_k(t):
+        from repro.parallel.sharding import current_mesh_axes
+        axes = current_mesh_axes()
+        if axes.get("model") and K % axes["model"] == 0:
+            from jax.sharding import PartitionSpec as P
+            dp = tuple(a for a in ("pod", "data") if a in axes)
+            dpn = 1
+            for a in dp:
+                dpn *= axes[a]
+            b_ax = dp if (dp and t.shape[0] % dpn == 0) else None
+            return jax.lax.with_sharding_constraint(
+                t, P(b_ax, None, None, "model"))
+        return t
+
+    r, k, v, w = _shard_k(r), _shard_k(k), _shard_k(v), _shard_k(w)
+    out_dt = r.dtype
+    # big streams stay in the input dtype; fp32 only inside per-chunk tiles
+    rc = r.reshape(B, nc, C, H, K).transpose(1, 0, 3, 2, 4)  # (n,B,H,C,K)
+    kc = k.reshape(B, nc, C, H, K).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nc, C, H, K).transpose(1, 0, 3, 2, 4)
+    lw = jnp.log(jnp.clip(w.astype(f32), 1e-12, 1.0)) \
+            .reshape(B, nc, C, H, K).transpose(1, 0, 3, 2, 4)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, K, K), f32)
+
+    tri_lower = jnp.tril(jnp.ones((C, C), bool), k=-1)   # i < t strictly
+
+    def body(state, xs):
+        rb, kb, vb, lwb = xs                              # (B,H,C,K)
+        rb = rb.astype(f32)
+        kb = kb.astype(f32)
+        vb = vb.astype(f32)
+        A = jnp.cumsum(lwb, axis=2) - lwb                 # exclusive cumsum A_t
+        Atot = A[:, :, -1] + lwb[:, :, -1]                # (B,H,K) full-chunk decay
+        # ---- intra-chunk: decay(i->t) = exp(A_t - A_i - lw_i), i < t
+        D = A[:, :, :, None, :] - A[:, :, None, :, :] - lwb[:, :, None, :, :]
+        D = jnp.where(tri_lower[None, None, :, :, None], D, -jnp.inf)
+        scores = jnp.einsum("bhtk,bhtik,bhik->bhti", rb, jnp.exp(D), kb)
+        # diagonal bonus term (current token, weight u)
+        diag = jnp.einsum("bhtk,hk,bhtk->bht", rb, u.astype(f32), kb)
+        y = jnp.einsum("bhti,bhik->bhtk", scores, vb)
+        y = y + diag[..., None] * vb
+        # ---- inter-chunk: read previous state
+        rdec = rb * jnp.exp(A)                            # (B,H,C,K)
+        y = y + jnp.einsum("bhtk,bhkv->bhtv", rdec, state)
+        # ---- state update
+        kdec = kb * jnp.exp(Atot[:, :, None, :] - A - lwb)  # decay i -> chunk end
+        state = state * jnp.exp(Atot)[..., None] + \
+            jnp.einsum("bhik,bhiv->bhkv", kdec, vb)
+        return state, y.astype(out_dt)
+
+    state, ys = jax.lax.scan(body, s0, (rc, kc, vc, lw))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, K)
+    return y, state
+
+
+def wkv_step(r, k, v, w, u, state):
+    """One decode step. r,k,v,w: (B,H,K); state: (B,H,K,V)."""
+    f32 = jnp.float32
+    r, k, v, w = (t.astype(f32) for t in (r, k, v, w))
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    y = jnp.einsum("bhk,bhkv->bhv", r, state + u.astype(f32)[None, :, :, None] * kv)
+    state = state * w[..., None] + kv
+    return y, state
+
+
+def _ddlerp(tm, x, xx):
+    """Data-dependent token-shift mixing -> 5 mixed streams (r,k,v,w,g)."""
+    dt = x.dtype
+    delta = xx - x
+    base = x + delta * tm["mu_base"].astype(dt)
+    lora = jnp.tanh(jnp.einsum("bsd,dfl->bsfl", base, tm["mix_w1"].astype(dt)))
+    adj = jnp.einsum("bsfl,fld->bsfd", lora, tm["mix_w2"].astype(dt))
+    mixed = x[:, :, None, :] + delta[:, :, None, :] * \
+        (tm["mu"].astype(dt)[None, None] + adj)
+    return [mixed[:, :, i, :] for i in range(5)]
+
+
+def time_mix(tm, x, n_heads: int, head_dim: int, state=None, chunk: int = 64):
+    """state: None (train) or dict(shift:(B,1,D), wkv:(B,H,K,K))."""
+    dt = x.dtype
+    B, S, D = x.shape
+    shift = state["shift"] if state is not None else None
+    xx = _token_shift(x, shift)
+    xr, xk, xv, xw, xg = _ddlerp(tm, x, xx)
+    r = (xr @ tm["wr"].astype(dt)).reshape(B, S, n_heads, head_dim)
+    k = (xk @ tm["wk"].astype(dt)).reshape(B, S, n_heads, head_dim)
+    v = (xv @ tm["wv"].astype(dt)).reshape(B, S, n_heads, head_dim)
+    g = jax.nn.silu(xg @ tm["wg"].astype(dt))
+    dec = tm["decay_base"].astype(jnp.float32) + \
+        (jnp.tanh(xw @ tm["decay_w1"].astype(dt)) @ tm["decay_w2"].astype(dt)).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec)).reshape(B, S, n_heads, head_dim)
+
+    if state is not None and S == 1:
+        y, wkv = wkv_step(r[:, 0], k[:, 0], v[:, 0], w[:, 0], tm["bonus"],
+                          state["wkv"])
+        y = y[:, None]
+        new_state = {"shift": x, "wkv": wkv}
+    else:
+        s0 = state["wkv"] if state is not None else None
+        y, wkv = wkv_chunked(r, k, v, w.astype(jnp.float32), tm["bonus"], s0,
+                             chunk=chunk)
+        new_state = {"shift": x[:, -1:], "wkv": wkv}
+
+    # per-head group norm
+    y = y.astype(jnp.float32)
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = y.reshape(B, S, D) * tm["ln_x"].astype(jnp.float32)
+    out = (y.astype(dt) * g) @ tm["wo"].astype(dt)
+    return out, new_state
+
+
+def channel_mix(cm, x, state=None):
+    dt = x.dtype
+    shift = state["shift"] if state is not None else None
+    xx = _token_shift(x, shift)
+    xk = x + (xx - x) * cm["mu_k"].astype(dt)
+    xr = x + (xx - x) * cm["mu_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(xk @ cm["wk"].astype(dt)))
+    out = jax.nn.sigmoid(xr @ cm["wr"].astype(dt)) * (k @ cm["wv"].astype(dt))
+    return out, {"shift": x[:, -1:]}

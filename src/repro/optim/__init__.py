@@ -1,0 +1,1 @@
+from .optimizers import adamw, sgd, Optimizer, global_norm

@@ -1,0 +1,98 @@
+"""Minimal, fully-sharded optimizers (no external deps).
+
+Optimizer state mirrors the parameter pytree leaf-for-leaf, so whatever
+sharding the params carry propagates to ``m``/``v`` (ZeRO-style: state is as
+sharded as the params are). Params are fp32 masters; forward/backward casts
+to bf16 at use sites.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable          # (params, grads, state) -> (params, state)
+
+    def global_norm(self, tree):
+        return global_norm(tree)
+
+
+def _clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          clip_norm: Optional[float] = 1.0,
+          schedule: Optional[Callable] = None) -> Optimizer:
+    """AdamW with fp32 master weights held in the optimizer state; the live
+    params are bf16 (compute dtype) so weight-moving collectives are half
+    size. Mixed-precision recipe: bf16 fwd/bwd, fp32 m/v/master."""
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+                "m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if clip_norm is not None:
+            grads, _ = _clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr_t = lr if schedule is None else schedule(step) * lr
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(mast, m_, v_):
+            u = (m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+            return mast - lr_t * (u + weight_decay * mast)
+        master = jax.tree.map(upd, state["master"], m, v)
+        params = jax.tree.map(lambda mast, p: mast.astype(p.dtype), master, params)
+        return params, {"master": master, "m": m, "v": v, "step": step}
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: float = 0.01, momentum: float = 0.0,
+        clip_norm: Optional[float] = None) -> Optimizer:
+    def init(params):
+        if momentum:
+            return {"mom": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                        params),
+                    "step": jnp.zeros((), jnp.int32)}
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if clip_norm is not None:
+            grads, _ = _clip_by_global_norm(grads, clip_norm)
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g, state["mom"], grads)
+            params = jax.tree.map(
+                lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+                params, mom)
+            return params, {"mom": mom, "step": state["step"] + 1}
+        params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g).astype(p.dtype),
+            params, grads)
+        return params, {"step": state["step"] + 1}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,3 @@
+from .sharding import (param_specs, batch_specs, state_specs, dp_axes,
+                       named, to_named_tree, constrain_act, constrain_qkv,
+                       current_mesh_axes)

@@ -1,0 +1,56 @@
+"""Fault injection + elastic worker pool for the FL runtime.
+
+Failure semantics: a failed worker stops responding (its in-flight training
+never completes). The aggregation server's straggler timeout converts the
+silence into a ``failed`` profile flag, which every selection policy treats
+as exclusion — the paper's worker-selection machinery doubles as the
+failure-recovery path. Recovery/join simply (re)registers the worker; the
+next selection round picks it up (elastic scaling).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core.estimator import WorkerProfile
+from repro.core.events import EventLoop
+from repro.core.server import AggregationServer
+from repro.core.worker import FLWorker
+
+
+@dataclass
+class FaultInjector:
+    """Schedules worker kill / recover events on the simulation clock."""
+    loop: EventLoop
+    server: AggregationServer
+
+    def kill_at(self, t: float, worker_id: str):
+        def _kill():
+            w = self.server.workers.get(worker_id)
+            if w is not None:
+                w.profile.failed = True
+        self.loop.at(t, _kill)
+
+    def recover_at(self, t: float, worker_id: str):
+        def _recover():
+            w = self.server.workers.get(worker_id)
+            if w is not None:
+                w.profile.failed = False
+        self.loop.at(t, _recover)
+
+
+@dataclass
+class ElasticPool:
+    """Workers joining/leaving mid-training (elastic scaling)."""
+    loop: EventLoop
+    server: AggregationServer
+
+    def join_at(self, t: float, worker: FLWorker):
+        def _join():
+            self.server.add_worker(worker)
+        self.loop.at(t, _join)
+
+    def leave_at(self, t: float, worker_id: str):
+        def _leave():
+            self.server.remove_worker(worker_id)
+        self.loop.at(t, _leave)

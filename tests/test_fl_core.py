@@ -1,0 +1,192 @@
+"""Unit + property tests for the FL core: aggregation algorithms
+(eqs 2.1-2.7), worker selection (Algorithms 1 & 2), eq-3.4 estimation,
+warehouse/pointer semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as agg
+from repro.core.estimator import TimeEstimator, WorkerProfile
+from repro.core.selection import (RMinRMaxSelector, TimeBasedSelector,
+                                  RandomSelector, AllSelector)
+from repro.core.warehouse import DataWarehouse, DiskStorage, Pointer
+
+
+def _tree(rng, scale=1.0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(rng))
+    return {"a": jax.random.normal(k1, (7, 5)) * scale,
+            "b": {"c": jax.random.normal(k2, (11,)) * scale}}
+
+
+# ---------------- aggregation ----------------
+
+def test_fedavg_identity():
+    t = _tree(0)
+    out = agg.fedavg([agg.WorkerUpdate(weights=t) for _ in range(4)])
+    assert all(jnp.allclose(a, b, atol=1e-6)
+               for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(t)))
+
+
+def test_fedavg_mean_of_two():
+    t1, t2 = _tree(1), _tree(2)
+    out = agg.fedavg([agg.WorkerUpdate(weights=t1),
+                      agg.WorkerUpdate(weights=t2)])
+    expect = jax.tree.map(lambda a, b: (a + b) / 2, t1, t2)
+    assert all(jnp.allclose(a, b, atol=1e-6)
+               for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(expect)))
+
+
+@given(st.integers(0, 30))
+@settings(deadline=None, max_examples=20)
+def test_staleness_weights_monotone_decreasing(s):
+    assert agg.linear_weight(s + 1) < agg.linear_weight(s) <= 1.0
+    assert agg.polynomial_weight(s + 1) < agg.polynomial_weight(s) <= 1.0
+    assert agg.exponential_weight(s + 1) < agg.exponential_weight(s) <= 1.0
+
+
+@given(st.lists(st.integers(0, 10), min_size=2, max_size=6))
+@settings(deadline=None, max_examples=20)
+def test_weighted_fedavg_convexity(stalenesses):
+    """Aggregate stays inside the convex hull of the inputs (per leaf)."""
+    trees = [_tree(i) for i in range(len(stalenesses))]
+    ups = [agg.WorkerUpdate(weights=t, staleness=s, n_data=1)
+           for t, s in zip(trees, stalenesses)]
+    out = agg.weighted_fedavg(ups)
+    for leaf_out, *leaf_ins in zip(jax.tree.leaves(out),
+                                   *[jax.tree.leaves(t) for t in trees]):
+        lo = jnp.min(jnp.stack(leaf_ins), axis=0)
+        hi = jnp.max(jnp.stack(leaf_ins), axis=0)
+        assert bool(jnp.all(leaf_out >= lo - 1e-5))
+        assert bool(jnp.all(leaf_out <= hi + 1e-5))
+
+
+def test_weighted_equals_fedavg_when_uniform():
+    trees = [_tree(i) for i in range(3)]
+    ups = [agg.WorkerUpdate(weights=t, staleness=0, n_data=1) for t in trees]
+    a = agg.fedavg(ups)
+    b = agg.weighted_fedavg(ups)
+    assert all(jnp.allclose(x, y, atol=1e-6)
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_kernel_fedavg_matches_tree_fedavg():
+    from repro.kernels.ops import fedavg_aggregate
+    trees = [_tree(i) for i in range(3)]
+    ups = [agg.WorkerUpdate(weights=t) for t in trees]
+    a = agg.fedavg(ups)
+    b = fedavg_aggregate(trees, jnp.ones((3,)), interpret=True)
+    assert all(jnp.allclose(x, y, atol=1e-5)
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------- estimation (eq 3.4) ----------------
+
+def test_eq34_estimation():
+    est = TimeEstimator(server_freq=3.0, t_onebatch_server=0.05)
+    p = WorkerProfile("w0", cpu_freq=1.5, cpu_prop=0.5, n_batches=4)
+    # per-batch = 0.05 * 3.0 / (1.5*0.5) = 0.2; epoch over 4 batches = 0.8
+    assert abs(est.t_one(p) - 0.8) < 1e-9
+    est.observe_training("w0", 0.33)
+    assert est.t_one(p) == 0.33     # measurement overrides the heuristic
+
+
+def test_transmit_estimation():
+    est = TimeEstimator()
+    p = WorkerProfile("w0", bandwidth=10e6)
+    assert abs(est.t_transmit(p, 5_000_000) - 0.5) < 1e-9
+
+
+# ---------------- selection ----------------
+
+def _profiles(freqs):
+    return [WorkerProfile(f"w{i}", cpu_freq=f, cpu_prop=1.0, bandwidth=1e9,
+                          n_batches=1) for i, f in enumerate(freqs)]
+
+
+def test_alg1_fastest_always_selected():
+    est = TimeEstimator()
+    sel = RMinRMaxSelector(est, model_bytes=1000, rmin=5, rmax=5)
+    profs = _profiles([3.0, 2.0, 1.0, 0.5])
+    chosen = sel.select(profs)
+    assert "w0" in chosen                      # fastest satisfies its own bound
+    # with rmin == rmax, slow workers are excluded
+    assert "w3" not in chosen
+
+
+def test_alg1_update_diverges_rmin_rmax():
+    est = TimeEstimator()
+    sel = RMinRMaxSelector(est, model_bytes=1000, rmin=5, rmax=5)
+    sel.on_round_end(0.5)                      # accuracy rose from 0
+    assert sel.rmin < 5.0 and sel.rmax > 5.0   # eqs 3.1/3.2
+
+
+def test_alg2_admits_more_workers_as_T_grows():
+    est = TimeEstimator()
+    profs = _profiles([3.0, 2.0, 1.0, 0.5])
+    sel = TimeBasedSelector(est, model_bytes=1000, r=10, T0=0.0, accuracy_threshold=0.01)
+    assert sel.select(profs) == []             # T=0 admits nobody
+    sel.on_round_end(0.0)                      # no gain -> grow T (eq 3.3)
+    s1 = set(sel.select(profs))
+    assert len(s1) >= 1
+    sel.on_round_end(0.0)
+    s2 = set(sel.select(profs))
+    assert s1 <= s2 and len(s2) > len(s1)      # monotone admission
+
+
+def test_alg2_keeps_T_on_accuracy_gain():
+    est = TimeEstimator()
+    profs = _profiles([3.0, 1.0])
+    sel = TimeBasedSelector(est, model_bytes=1000, r=10, T0=0.0,
+                            accuracy_threshold=0.01)
+    sel.select(profs)
+    sel.on_round_end(0.0)
+    T_after_open = sel.T
+    sel.select(profs)
+    sel.on_round_end(0.5)                      # big gain: T must NOT grow
+    assert sel.T == T_after_open
+
+
+@given(st.integers(1, 10))
+@settings(deadline=None, max_examples=10)
+def test_random_selector_size(k):
+    sel = RandomSelector(k=k, seed=1)
+    profs = _profiles([1.0] * 10)
+    assert len(sel.select(profs)) == min(k, 10)
+
+
+def test_failed_workers_never_selected():
+    profs = _profiles([3.0, 2.0])
+    profs[0].failed = True
+    assert AllSelector().select(profs) == ["w1"]
+    est = TimeEstimator()
+    sel = TimeBasedSelector(est, 1000, r=10, T0=1e9)
+    assert "w0" not in sel.select(profs)
+
+
+# ---------------- warehouse / pointers ----------------
+
+def test_warehouse_roundtrip_and_tickets():
+    wh = DataWarehouse()
+    uid = wh.put({"x": 1})
+    assert wh.get(uid) == {"x": 1}
+    cred = wh.issue_ticket(uid)
+    assert wh.redeem_ticket(cred) == {"x": 1}
+    with pytest.raises(KeyError):
+        wh.redeem_ticket(cred)                 # one-time credential
+
+
+def test_warehouse_disk_storage(tmp_path):
+    wh = DataWarehouse()
+    wh.add_storage("disk", DiskStorage(str(tmp_path)))
+    uid = wh.put(np.arange(10), storage="disk")
+    assert np.array_equal(wh.get(uid), np.arange(10))
+    wh.delete(uid)
+    assert uid not in wh
+
+
+def test_pointer_identity():
+    p1 = Pointer("worker://w0", "obj1")
+    p2 = Pointer("worker://w0", "obj1")
+    assert p1 == p2 and str(p1) == "worker://w0/obj1"

@@ -1,0 +1,32 @@
+"""The thesis' faithful CNN (28x28 MNIST-class / 32x32 CIFAR-class):
+correctness at small scale (the FL benchmarks use the fast MLP; see
+models/mlp.py docstring for why)."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_cnn import CIFAR_CNN, MNIST_CNN
+from repro.models import cnn
+
+
+def test_mnist_cnn_shapes():
+    p = cnn.init_cnn(jax.random.PRNGKey(0), MNIST_CNN)
+    x = jnp.zeros((4, 28, 28, 1))
+    logits = cnn.cnn_logits(p, x)
+    assert logits.shape == (4, 10)
+
+
+def test_cifar_cnn_shapes():
+    p = cnn.init_cnn(jax.random.PRNGKey(0), CIFAR_CNN)
+    x = jnp.zeros((2, 32, 32, 3))
+    logits = cnn.cnn_logits(p, x)
+    assert logits.shape == (2, 10)
+
+
+def test_cnn_sgd_reduces_loss():
+    p = cnn.init_cnn(jax.random.PRNGKey(0), MNIST_CNN)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (16, 28, 28, 1))
+    y = jax.random.randint(jax.random.PRNGKey(2), (16,), 0, 10)
+    l0 = cnn.cnn_loss(p, {"x": x, "y": y})
+    p2 = cnn.cnn_sgd_train(p, x, y, lr=0.05, epochs=3)
+    l1 = cnn.cnn_loss(p2, {"x": x, "y": y})
+    assert float(l1) < float(l0)
