@@ -1,0 +1,112 @@
+"""Aggregation-server merge microbenchmark: flat-buffer fused fast path vs
+the per-leaf tree-map baseline (the server's hot loop before this PR).
+
+Config mirrors the paper regime scaled up to a ~1M-param model with ragged
+leaf shapes, W=8 worker updates per merge, alpha-damped server mixing.
+Both paths are measured exactly as the server drives them: worker responses
+arrive as pytrees; the baseline eagerly tree-maps ``_weighted_mean`` then
+``mix_into``; the fused path packs into the persistent (W, N) row buffer
+and merges in one pass (``FlatServerState.merge``).
+
+Emits ``benchmarks/results/BENCH_agg.json`` so later PRs have a perf
+trajectory. Run directly or via ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+W = 8              # worker updates per merge
+ALPHA = 0.5        # server damping (exercises the fused mix term)
+ROUNDS = 30        # timed merges per path
+HIDDEN = 1024      # ~1.07M params total
+
+
+def _model(seed: int):
+    import jax
+    import jax.numpy as jnp
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    t = {
+        "w1": jax.random.normal(ks[0], (784, HIDDEN)) * 0.05,
+        "b1": jax.random.normal(ks[1], (HIDDEN,)) * 0.05,
+        "w2": jax.random.normal(ks[2], (HIDDEN, 256)) * 0.05,
+        "b2": jax.random.normal(ks[3], (256,)) * 0.05,
+        "w3": jax.random.normal(ks[4], (256, 10)) * 0.05,
+        "b3": jax.random.normal(ks[5], (10,)) * 0.05,
+    }
+    jax.block_until_ready(t)
+    return t
+
+
+def _time_path(step, server, rounds: int = ROUNDS) -> float:
+    """Median-free simple timing: total wall seconds / merges, after warmup."""
+    import jax
+    s = step(server)                 # warmup: jit traces, buffers allocate
+    s = step(s)
+    jax.block_until_ready(jax.tree.leaves(s))
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        s = step(s)
+    jax.block_until_ready(jax.tree.leaves(s))
+    return (time.perf_counter() - t0) / rounds
+
+
+def run() -> dict:
+    import jax
+    from repro.core import aggregation as agg
+    from repro.core import flatbuf
+
+    server0 = _model(0)
+    updates = [_model(1 + i) for i in range(W)]
+    ws = [1.0 / (1 + (i % 3)) for i in range(W)]       # staleness-ish weights
+    n_params = sum(l.size for l in jax.tree.leaves(server0))
+
+    def baseline_step(server):
+        return agg.mix_into(server, agg._weighted_mean(updates, ws), ALPHA)
+
+    flat_state = flatbuf.FlatServerState(server0)
+
+    def fused_step(server):
+        return flat_state.merge(server, updates, ws, ALPHA)
+
+    t_base = _time_path(baseline_step, server0)
+    t_fused = _time_path(fused_step, server0)
+
+    # parity while we're here — a benchmark of wrong numbers is worthless
+    a = baseline_step(server0)
+    b = fused_step(server0)
+    max_err = max(float(abs(x - y).max())
+                  for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+    rec = {
+        "config": {"W": W, "n_params": int(n_params), "alpha": ALPHA,
+                   "rounds": ROUNDS, "backend": jax.default_backend()},
+        "treemap_baseline_ms": round(t_base * 1e3, 3),
+        "flat_fused_ms": round(t_fused * 1e3, 3),
+        "speedup": round(t_base / t_fused, 2),
+        "max_abs_err": max_err,
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "BENCH_agg.json").write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main() -> None:
+    rec = run()
+    print("== Aggregation merge: flat fused vs per-leaf tree-map ==")
+    print(f"W={rec['config']['W']} n_params={rec['config']['n_params']} "
+          f"alpha={rec['config']['alpha']} backend={rec['config']['backend']}")
+    print(f"tree-map baseline: {rec['treemap_baseline_ms']:.3f} ms/merge")
+    print(f"flat fused path:   {rec['flat_fused_ms']:.3f} ms/merge")
+    print(f"speedup:           {rec['speedup']}x  "
+          f"(max |err| {rec['max_abs_err']:.2e})")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,10 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 
 def main() -> None:
-    from benchmarks import fl_figures, roofline
+    from benchmarks import agg_bench, fl_figures, roofline
+
+    agg_bench.main()
+    print()
 
     print("name,us_per_call,derived")
     for name, fn in fl_figures.ALL.items():

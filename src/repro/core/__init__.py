@@ -4,6 +4,6 @@ worker selection (Algorithms 1 & 2), eq-3.4 time estimation, deterministic
 event-driven sync/async runtime, pod-level federated training, and
 beyond-paper update compression."""
 from . import (aggregation, compression, estimator, events, federated,
-               selection, server, warehouse, worker)
+               flatbuf, selection, server, warehouse, worker)
 from .experiment import (TABLE_4_1, TABLE_4_2, make_setup, run_fl,
                          run_sequential_baseline, time_to_accuracy)

@@ -3,15 +3,24 @@
 All operate on model-weight pytrees. ``staleness`` of a response is
 ``i - xi``: current server version minus the server version the worker
 fetched before training.
+
+The pytree API is a thin wrapper over the flat-buffer fast path
+(``core.flatbuf``): updates are packed once into a contiguous ``(W, N)``
+buffer and merged in a single fused pass instead of a per-leaf, per-worker
+tree-map.  ``_weighted_mean`` is the per-leaf reference implementation
+(kept as the parity oracle; set ``REPRO_AGG_PATH=tree`` to force it).
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 from typing import Callable, List, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from . import flatbuf
 
 
 @dataclass(frozen=True)
@@ -22,11 +31,8 @@ class WorkerUpdate:
 
 
 def _weighted_mean(trees: Sequence, weights: Sequence[float]):
-    w = np.asarray(weights, dtype=np.float64)
-    s = w.sum()
-    if s <= 0:
-        raise ValueError("aggregation weights sum to zero")
-    w = (w / s).astype(np.float32)
+    """Per-leaf reference path: W reads + W-1 adds per leaf."""
+    w = flatbuf.normalized_weights(weights)
 
     def agg(*leaves):
         out = jnp.zeros_like(leaves[0], dtype=jnp.float32)
@@ -36,11 +42,27 @@ def _weighted_mean(trees: Sequence, weights: Sequence[float]):
     return jax.tree.map(agg, *trees)
 
 
+def _weighted_mean_flat(trees: Sequence, weights: Sequence[float]):
+    """Flat fast path: pack once, one fused contraction, unpack."""
+    w = flatbuf.normalized_weights(weights)
+    bundle = flatbuf.bundle_for(trees[0])
+    rows = bundle.pack_many(trees)
+    merged = flatbuf.fused_weighted_sum(rows, w)
+    return bundle.unpack(merged)
+
+
+def weighted_mean(trees: Sequence, weights: Sequence[float]):
+    if (os.environ.get("REPRO_AGG_PATH") != "tree"
+            and flatbuf.packable(trees[0])):
+        return _weighted_mean_flat(trees, weights)
+    return _weighted_mean(trees, weights)
+
+
 # --- eq 2.1 / 2.2: federated averaging (sync + async are the same formula;
 # async simply admits updates with staleness > 0) -------------------------
 
 def fedavg(updates: List[WorkerUpdate]):
-    return _weighted_mean([u.weights for u in updates], [1.0] * len(updates))
+    return weighted_mean([u.weights for u in updates], [1.0] * len(updates))
 
 
 # --- eqs 2.3-2.7: weighted federated averaging ----------------------------
@@ -65,7 +87,7 @@ def weighted_fedavg(updates: List[WorkerUpdate],
     worker's available data' as an extra factor)."""
     ws = [weight_fn(u.staleness) * (u.n_data if data_weighted else 1.0)
           for u in updates]
-    return _weighted_mean([u.weights for u in updates], ws)
+    return weighted_mean([u.weights for u in updates], ws)
 
 
 AGGREGATORS = {
@@ -74,6 +96,25 @@ AGGREGATORS = {
     "polynomial": lambda ups: weighted_fedavg(ups, polynomial_weight),
     "exponential": lambda ups: weighted_fedavg(ups, exponential_weight),
 }
+
+# per-update scalar weights of each named aggregator — lets the server fuse
+# the weighted sum and the alpha-mix into ONE kernel pass over the packed
+# buffers instead of AGGREGATORS[...] followed by mix_into
+UPDATE_WEIGHT_FNS = {
+    "fedavg": lambda u: 1.0,
+    "linear": lambda u: linear_weight(u.staleness) * u.n_data,
+    "polynomial": lambda u: polynomial_weight(u.staleness) * u.n_data,
+    "exponential": lambda u: exponential_weight(u.staleness) * u.n_data,
+}
+
+
+def update_weights(aggregator: str, updates: List[WorkerUpdate]):
+    """Scalar merge weight per update, or None if ``aggregator`` has no
+    scalar-weight form (then the caller must use AGGREGATORS)."""
+    fn = UPDATE_WEIGHT_FNS.get(aggregator)
+    if fn is None:
+        return None
+    return [fn(u) for u in updates]
 
 
 def mix_into(server_weights, aggregate, alpha: float = 1.0):

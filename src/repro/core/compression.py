@@ -45,10 +45,15 @@ class ErrorFeedbackCompressor:
     residual: Optional[object] = None
 
     def compress(self, delta_tree):
-        """Returns (reconstructed_tree, bytes_on_wire). Residuals update."""
+        """Returns (reconstructed_tree, bytes_on_wire). Residuals update.
+
+        Mask counts accumulate on-device and sync to the host ONCE per tree
+        — a per-leaf ``int(mask.sum())`` would force a device→host round
+        trip inside the hot loop for every leaf."""
         if self.residual is None:
             self.residual = jax.tree.map(jnp.zeros_like, delta_tree)
         wire_bytes = 0
+        kept_counts = []
         recon, new_res = [], []
         leaves, treedef = jax.tree.flatten(delta_tree)
         res_leaves = jax.tree.leaves(self.residual)
@@ -58,12 +63,13 @@ class ErrorFeedbackCompressor:
             if self.quantize:
                 q, scale = int8_quantize(kept)
                 kept = int8_dequantize(q, scale).astype(d.dtype) * mask
-                wire_bytes += int(mask.sum()) * 1 + 4     # int8 payload + scale
-            else:
-                wire_bytes += int(mask.sum()) * 4
+                wire_bytes += 4                           # per-tensor scale
+            kept_counts.append(mask.sum().astype(jnp.int32))
             wire_bytes += int(mask.size + 7) // 8         # bitmap
             recon.append(kept)
             new_res.append(x - kept)
+        payload_itemsize = 1 if self.quantize else 4      # int8 vs f32
+        wire_bytes += int(jnp.sum(jnp.stack(kept_counts))) * payload_itemsize
         self.residual = jax.tree.unflatten(treedef, new_res)
         return jax.tree.unflatten(treedef, recon), wire_bytes
 

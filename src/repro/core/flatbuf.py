@@ -1,0 +1,274 @@
+"""Flat-buffer aggregation fast path.
+
+The server's merge hot loop used to walk the model pytree once per worker
+per leaf (W reads + W-1 adds per leaf, re-dispatched eagerly every round).
+This module flattens the model *once* into a single contiguous f32 buffer
+and keeps every per-round structure persistent:
+
+  * ``ParamBundle`` — caches treedef / shapes / dtypes / offsets for one
+    model structure; ``pack``/``unpack``/``pack_many`` are jitted and the
+    shapes are static, so repeated rounds hit the jit cache.
+  * ``FlatServerState`` — owns a persistent ``(W_cap, N)`` stacked-update
+    buffer (worker responses land in pre-allocated rows) plus the packed
+    server buffer, and merges with ONE fused op:
+    ``new = (1-alpha) * server + alpha * sum_i w_i * x_i``.
+  * The fused op is the Pallas kernel ``kernels.fedavg_agg.fedavg_mix_flat``
+    on TPU backends (single VMEM pass, server buffer donated); elsewhere the
+    same math runs as one jitted XLA contraction over the packed buffer —
+    identical numerics, still a single fused pass (interpret-mode Pallas
+    would serialise per block on CPU; parity tests cover the kernel there).
+
+Buffers are padded to a multiple of ``BLOCK`` lanes so the kernel grid
+divides evenly and the padded tail (zeros in both server and updates)
+stays zero through every merge.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import fedavg_agg
+
+BLOCK = 512          # kernel tile width; pack pads N up to a multiple
+
+
+def _use_pallas_default() -> bool:
+    if os.environ.get("REPRO_FLAT_PALLAS"):
+        return os.environ["REPRO_FLAT_PALLAS"] != "0"
+    return jax.default_backend() == "tpu"
+
+
+def packable(tree) -> bool:
+    """True if every leaf is a fixed-shape array (packs into one buffer)."""
+    leaves = jax.tree.leaves(tree)
+    return bool(leaves) and all(hasattr(l, "shape") and hasattr(l, "dtype")
+                                for l in leaves)
+
+
+class ParamBundle:
+    """Pack/unpack one model structure to/from a flat f32 buffer.
+
+    Offsets, shapes and dtypes are computed once at construction; the jitted
+    pack/unpack close over them as static data, so every later call with the
+    same structure is a cache hit.
+    """
+
+    def __init__(self, template):
+        leaves, treedef = jax.tree.flatten(template)
+        if not leaves:
+            raise ValueError("cannot bundle an empty pytree")
+        self.treedef = treedef
+        self.shapes: Tuple[tuple, ...] = tuple(tuple(l.shape) for l in leaves)
+        self.dtypes = tuple(jnp.asarray(l).dtype for l in leaves)
+        self.sizes = tuple(int(np.prod(s, dtype=np.int64)) if s else 1
+                           for s in self.shapes)
+        off = np.concatenate([[0], np.cumsum(self.sizes)])
+        self.offsets = tuple(int(o) for o in off[:-1])
+        self.n_params = int(off[-1])
+        self.padded_size = -(-self.n_params // BLOCK) * BLOCK
+        self._pack = jax.jit(self._pack_impl)
+        self._unpack = jax.jit(self._unpack_impl)
+        self._pack_many = jax.jit(self._pack_many_impl)
+        # stale rows beyond the live W are zeroed, not just weight-0-masked:
+        # a non-finite value left by a past round would turn 0 * inf into
+        # NaN inside the fused contraction
+        self._pack_rows = jax.jit(
+            lambda rows, trees: rows.at[:len(trees)].set(
+                self._pack_many_impl(trees)).at[len(trees):].set(0.0),
+            donate_argnums=(0,))
+
+    # --- impls (jitted once per bundle) ---
+    def _pack_impl(self, tree):
+        parts = [jnp.asarray(l).reshape(-1).astype(jnp.float32)
+                 for l in jax.tree.leaves(tree)]
+        pad = self.padded_size - self.n_params
+        if pad:
+            parts.append(jnp.zeros((pad,), jnp.float32))
+        return jnp.concatenate(parts)
+
+    def _pack_many_impl(self, trees: tuple):
+        return jnp.stack([self._pack_impl(t) for t in trees])
+
+    def _unpack_impl(self, flat):
+        leaves = [flat[o:o + n].reshape(s).astype(d)
+                  for o, n, s, d in zip(self.offsets, self.sizes,
+                                        self.shapes, self.dtypes)]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    # --- public API ---
+    def pack(self, tree) -> jnp.ndarray:
+        """tree -> (padded_size,) f32 flat buffer (zero tail)."""
+        return self._pack(tree)
+
+    def pack_many(self, trees: Sequence) -> jnp.ndarray:
+        """[tree] * W -> (W, padded_size) stacked flat buffers."""
+        return self._pack_many(tuple(trees))
+
+    def pack_into(self, rows: jnp.ndarray, trees: Sequence) -> jnp.ndarray:
+        """Pack W trees into the first W rows of the persistent buffer in
+        ONE jitted dispatch. ``rows`` is donated (updated in place)."""
+        return self._pack_rows(rows, tuple(trees))
+
+    def unpack(self, flat: jnp.ndarray):
+        """(padded_size,) or (n_params,) buffer -> tree (original dtypes)."""
+        return self._unpack(flat)
+
+
+_BUNDLES: Dict[tuple, ParamBundle] = {}
+
+
+def bundle_for(template) -> ParamBundle:
+    """Memoised ParamBundle keyed on (structure, shapes, dtypes)."""
+    leaves, treedef = jax.tree.flatten(template)
+    key = (treedef, tuple((tuple(l.shape), str(jnp.asarray(l).dtype))
+                          for l in leaves))
+    b = _BUNDLES.get(key)
+    if b is None:
+        b = _BUNDLES[key] = ParamBundle(template)
+    return b
+
+
+# --- fused merge ops -------------------------------------------------------
+# wvec = [server_scale, w_0 .. w_{Wcap-1}]; rows beyond the live W carry
+# weight 0, so capacity growth never changes the result — only the jit key.
+
+def _fused_mix(server_flat, rows, wvec, use_pallas: bool, interpret: bool):
+    if use_pallas:
+        return fedavg_agg.fedavg_mix_flat(rows, wvec[1:], server_flat,
+                                          wvec[0], block_n=BLOCK,
+                                          interpret=interpret)
+    return wvec[0] * server_flat + jax.lax.dot_general(
+        wvec[1:], rows, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+_fused_mix_jit = jax.jit(_fused_mix, donate_argnums=(0,),
+                         static_argnames=("use_pallas", "interpret"))
+
+
+def _weighted_sum(rows, w, use_pallas: bool, interpret: bool):
+    if use_pallas:
+        return fedavg_agg.fedavg_agg_flat(rows, w, block_n=BLOCK,
+                                          interpret=interpret)
+    return jax.lax.dot_general(w, rows, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+_weighted_sum_jit = jax.jit(_weighted_sum,
+                            static_argnames=("use_pallas", "interpret"))
+
+
+def _flags(use_pallas, interpret):
+    if use_pallas is None:
+        use_pallas = _use_pallas_default()
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return bool(use_pallas), bool(interpret)
+
+
+def fused_merge(server_flat, rows, wvec, use_pallas: Optional[bool] = None,
+                interpret: Optional[bool] = None):
+    """One-pass ``wvec[0]*server + wvec[1:] @ rows`` on packed buffers.
+
+    ``server_flat`` is donated — callers must treat it as consumed.
+    """
+    use_pallas, interpret = _flags(use_pallas, interpret)
+    return _fused_mix_jit(server_flat, rows, jnp.asarray(wvec, jnp.float32),
+                          use_pallas=use_pallas, interpret=interpret)
+
+
+def fused_weighted_sum(rows, w, use_pallas: Optional[bool] = None,
+                       interpret: Optional[bool] = None):
+    """One-pass ``w @ rows`` (no server term — the alpha>=1 replace-on-
+    aggregate case must not read the server buffer at all: the reference
+    ``mix_into`` short-circuits there, and ``0 * server`` would turn a
+    non-finite server model into NaN instead of replacing it)."""
+    use_pallas, interpret = _flags(use_pallas, interpret)
+    return _weighted_sum_jit(rows, jnp.asarray(w, jnp.float32),
+                             use_pallas=use_pallas, interpret=interpret)
+
+
+def normalized_weights(weights: Sequence[float]) -> np.ndarray:
+    w = np.asarray(weights, dtype=np.float64)
+    s = w.sum()
+    if s <= 0:
+        raise ValueError("aggregation weights sum to zero")
+    return (w / s).astype(np.float32)
+
+
+class FlatServerState:
+    """Persistent flat-buffer merge state for one AggregationServer.
+
+    Keeps (a) the packed server model, mirrored against the pytree the
+    server hands us (re-packed only if the server's tree is not the one we
+    produced), and (b) a pre-allocated (W_cap, N) row buffer that worker
+    updates are packed into — no fresh ``jnp.stack`` per leaf per round.
+    """
+
+    def __init__(self, template, use_pallas: Optional[bool] = None):
+        self.bundle = bundle_for(template)
+        self.use_pallas = use_pallas
+        self._rows: Optional[jnp.ndarray] = None
+        self._server_flat: Optional[jnp.ndarray] = None
+        self._server_tree: Optional[object] = None   # strong ref: mirror key
+
+    @property
+    def capacity(self) -> int:
+        return 0 if self._rows is None else int(self._rows.shape[0])
+
+    def _ensure_capacity(self, w: int):
+        if self.capacity < w:
+            new = jnp.zeros((w, self.bundle.padded_size), jnp.float32)
+            if self._rows is not None:
+                new = new.at[:self.capacity].set(self._rows)
+            self._rows = new
+
+    def _server_buffer(self, server_tree) -> jnp.ndarray:
+        if (self._server_flat is None
+                or self._server_tree is not server_tree):
+            self._server_flat = self.bundle.pack(server_tree)
+        buf = self._server_flat
+        self._server_flat = None         # donated to the merge below
+        return buf
+
+    def merge(self, server_tree, update_trees: Sequence,
+              weights: Sequence[float], alpha: float = 1.0):
+        """Fused ``(1-alpha)*server + alpha * sum_i w_hat_i * x_i``.
+
+        Returns the merged pytree (original dtypes); the packed result is
+        cached so next round's merge skips re-packing the server model.
+        """
+        w = normalized_weights(weights)
+        n = len(update_trees)
+        self._ensure_capacity(n)
+        self._rows = self.bundle.pack_into(self._rows, update_trees)
+        if alpha >= 1.0:
+            # replace-on-aggregate: no server term (matches mix_into's
+            # short-circuit; also skips the server read entirely)
+            wv = np.zeros((self.capacity,), np.float32)
+            wv[:n] = w
+            merged = fused_weighted_sum(self._rows, wv, self.use_pallas)
+        else:
+            wvec = np.zeros((self.capacity + 1,), np.float32)
+            wvec[0] = 1.0 - alpha
+            wvec[1:1 + n] = alpha * w
+            server_flat = self._server_buffer(server_tree)
+            merged = fused_merge(server_flat, self._rows, wvec,
+                                 self.use_pallas)
+        out = self.bundle.unpack(merged)
+        self._server_flat, self._server_tree = merged, out
+        return out
+
+    def apply_delta(self, cur_tree, new_tree, base_tree):
+        """``cur + (new - base)`` as one fused pass over packed buffers
+        (async_delta response handling — the delta-accumulate variant with
+        a single signed-weight delta)."""
+        rows = self.bundle.pack_many((new_tree, base_tree))
+        cur = self.bundle.pack(cur_tree)
+        out = fused_merge(cur, rows, np.asarray([1.0, 1.0, -1.0], np.float32),
+                          self.use_pallas)
+        return self.bundle.unpack(out)

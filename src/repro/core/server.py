@@ -12,10 +12,14 @@ re-dispatched — fast workers never wait for slow ones (§2.2.2.4 point 3).
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
+import jax
+
 from . import aggregation as agg
+from . import flatbuf
 from .estimator import TimeEstimator, WorkerProfile
 from .events import EventLoop
 from .selection import Selector
@@ -73,6 +77,14 @@ class AggregationServer:
         self.async_latest_table = async_latest_table
         self._dispatch_base: Dict[str, object] = {}
         self._latest: Dict[str, tuple] = {}   # async: worker -> latest response
+        # flat-buffer merge fast path: packed server mirror + persistent
+        # (W, N) update rows; falls back to the pytree AGGREGATORS wrapper
+        # for non-array weight trees, unknown aggregator names, or when
+        # REPRO_AGG_PATH=tree forces the per-leaf reference end to end
+        self._flat: Optional[flatbuf.FlatServerState] = None
+        if (flatbuf.packable(weights)
+                and os.environ.get("REPRO_AGG_PATH") != "tree"):
+            self._flat = flatbuf.FlatServerState(weights)
 
         self.workers: Dict[str, FLWorker] = {}
         self.warehouse = DataWarehouse()
@@ -165,10 +177,15 @@ class AggregationServer:
             return  # thesis: sync ignores results that straddle an aggregation
         weights = w.warehouse.redeem_ticket(res.weights_ticket)
         if self.async_delta and self.mode == "async":
-            import jax
             base = self._dispatch_base.get(res.worker_id, self.weights)
-            weights = jax.tree.map(
-                lambda cur, new, b: cur + (new - b), self.weights, weights, base)
+            if self._flat is not None:
+                # delta-accumulate on packed buffers: cur + (new - base)
+                # in one fused pass instead of a per-leaf tree-map
+                weights = self._flat.apply_delta(self.weights, weights, base)
+            else:
+                weights = jax.tree.map(
+                    lambda cur, new, b: cur + (new - b), self.weights, weights,
+                    base)
         self._outstanding.discard(res.worker_id)
         if self.mode == "async":
             if self.async_latest_table:
@@ -219,7 +236,6 @@ class AggregationServer:
         if not self._cache:
             return
         self._round_open = False
-        merged = agg.AGGREGATORS[self.aggregator](self._cache)
         # async merges are damped (FedAsync-style server mixing): a single
         # worker's response nudges the global model instead of replacing it,
         # scaled down further for stale responses (eq 2.4 family).
@@ -228,7 +244,15 @@ class AggregationServer:
             alpha = self.async_alpha * (1.0 + stale) ** (-self.async_stale_pow)
         else:
             alpha = 1.0
-        self.weights = agg.mix_into(self.weights, merged, alpha)
+        ws = agg.update_weights(self.aggregator, self._cache)
+        if self._flat is not None and ws is not None:
+            # fast path: staleness-weighted sum + alpha-mix fused into one
+            # pass over the packed flat buffers (kernels/fedavg_agg.py)
+            self.weights = self._flat.merge(
+                self.weights, [u.weights for u in self._cache], ws, alpha)
+        else:
+            merged = agg.AGGREGATORS[self.aggregator](self._cache)
+            self.weights = agg.mix_into(self.weights, merged, alpha)
         # the pointer names the *model*: overwrite in place, uid stays stable
         # (workers' ACLs hold this pointer — thesis §3.3.1 step 7)
         self.warehouse.put(self.weights, uid=self.pointer.uid)

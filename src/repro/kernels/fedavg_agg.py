@@ -25,6 +25,17 @@ def _agg_kernel(w_ref, x_ref, o_ref):
         preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
 
+def _mix_kernel(w_ref, x_ref, s_ref, o_ref):
+    """o = w[0]*server + w[1:] @ stacked, one VMEM pass per (W+1, BN) tile."""
+    x = x_ref[...].astype(jnp.float32)        # (W, BN)
+    s = s_ref[...].astype(jnp.float32)        # (1, BN)
+    w = w_ref[...].astype(jnp.float32)        # (1, W+1)
+    acc = jax.lax.dot_general(
+        w[:, 1:], x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[...] = (w[:, 0:1] * s + acc).astype(o_ref.dtype)
+
+
 def fedavg_agg_flat(stacked: jnp.ndarray, weights: jnp.ndarray,
                     block_n: int = 512, interpret: bool = False) -> jnp.ndarray:
     """stacked: (W, N) worker models (flattened); weights: (W,) normalised.
@@ -47,3 +58,57 @@ def fedavg_agg_flat(stacked: jnp.ndarray, weights: jnp.ndarray,
         interpret=interpret,
     )(weights.reshape(1, W), stacked)
     return out[0, :N]
+
+
+def fedavg_mix_flat(stacked: jnp.ndarray, weights: jnp.ndarray,
+                    server: jnp.ndarray, server_scale,
+                    block_n: int = 512, interpret: bool = False) -> jnp.ndarray:
+    """Fused aggregate + server mixing in one HBM pass.
+
+    Returns ``server_scale * server + weights @ stacked``:
+
+      * ``server_scale = 1 - alpha`` with ``weights = alpha * w_hat`` is the
+        FedAsync ``mix_into`` damping fused with the weighted sum;
+      * ``server_scale = 1`` with signed weights is the delta-accumulate form
+        (``server + sum_i w_i * delta_i``) used by ``async_delta`` mode.
+
+    stacked: (W, N); weights: (W,) already scaled; server: (N,).
+    The server row streams through the same VMEM tile as the worker rows, so
+    per-byte traffic is (W+2)/(2W+1) of the unfused aggregate-then-mix chain
+    and no (N,) intermediate is materialised. When N is already a multiple of
+    ``block_n`` the server buffer aliases the output (in-place update).
+    """
+    W, N = stacked.shape
+    block_n = min(block_n, N)
+    pad = (-N) % block_n
+    wvec = jnp.concatenate([
+        jnp.asarray(server_scale, jnp.float32).reshape(1),
+        weights.astype(jnp.float32).reshape(W)]).reshape(1, W + 1)
+    server = server.reshape(1, N)
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+        server = jnp.pad(server, ((0, 0), (0, pad)))
+    Np = N + pad
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=(Np // block_n,),
+        in_specs=[
+            pl.BlockSpec((1, W + 1), lambda i: (0, 0)),
+            pl.BlockSpec((W, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Np), server.dtype),
+        input_output_aliases={} if pad else {2: 0},
+        interpret=interpret,
+    )(wvec, stacked, server)
+    return out[0, :N]
+
+
+def fedavg_delta_flat(server: jnp.ndarray, deltas: jnp.ndarray,
+                      weights: jnp.ndarray, block_n: int = 512,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Delta-accumulate variant: ``server + weights @ deltas`` (async_delta
+    mode / FedBuff-style additive composition), same fused single pass."""
+    return fedavg_mix_flat(deltas, weights, server, 1.0,
+                           block_n=block_n, interpret=interpret)

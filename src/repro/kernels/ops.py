@@ -30,20 +30,20 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
 
 def fedavg_aggregate(trees, weights, interpret=None):
     """Weighted-average a list of parameter pytrees via the fused kernel.
-    ``weights``: (W,) (unnormalised OK)."""
+    ``weights``: (W,) (unnormalised OK).
+
+    The pytrees are packed into one contiguous (W, N) buffer (cached
+    ``flatbuf.ParamBundle`` — treedef/offsets computed once per structure)
+    and aggregated with a SINGLE ``pallas_call`` over the packed buffer,
+    instead of one tiny launch per leaf group."""
+    from repro.core import flatbuf
     interpret = _default_interpret() if interpret is None else interpret
     w = jnp.asarray(weights, jnp.float32)
     w = w / jnp.maximum(w.sum(), 1e-9)
-    leaves_list = [jax.tree.leaves(t) for t in trees]
-    treedef = jax.tree.structure(trees[0])
-    out_leaves = []
-    for leaf_group in zip(*leaves_list):
-        stacked = jnp.stack([l.reshape(-1).astype(jnp.float32)
-                             for l in leaf_group])
-        flat = _fedavg.fedavg_agg_flat(stacked, w, interpret=interpret)
-        out_leaves.append(flat.reshape(leaf_group[0].shape)
-                          .astype(leaf_group[0].dtype))
-    return jax.tree.unflatten(treedef, out_leaves)
+    bundle = flatbuf.bundle_for(trees[0])
+    stacked = bundle.pack_many(trees)
+    flat = _fedavg.fedavg_agg_flat(stacked, w, interpret=interpret)
+    return bundle.unpack(flat)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

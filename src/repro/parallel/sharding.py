@@ -67,10 +67,25 @@ def pod_axis_is_vmapped():
         _TLS.no_pod = prev
 
 
+def _abstract_mesh():
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        return get()
+    # jax <= 0.4.x: no public accessor — read the trace-time context stack,
+    # falling back to the `with mesh:` thread-resources environment
+    from jax._src import mesh as _mesh_lib
+    stack = _mesh_lib.get_abstract_mesh()
+    am = (stack[-1] if stack else None) if isinstance(stack, tuple) else stack
+    if am is None or getattr(am, "empty", True):
+        env = _mesh_lib.thread_resources.env.physical_mesh
+        am = None if env.empty else env
+    return am
+
+
 def current_mesh_axes():
     """Axis-name -> size of the mesh active at trace time ({} outside jit /
     without a mesh context). Hides the pod axis under fl vmap."""
-    am = jax.sharding.get_abstract_mesh()
+    am = _abstract_mesh()
     if am is None or am.empty:
         return {}
     axes = dict(am.shape)

@@ -1,0 +1,69 @@
+"""Property tests for the FL core (hypothesis-based).
+
+Guarded with ``pytest.importorskip``: ``hypothesis`` is a dev-only extra
+(see requirements-dev.txt) and the tier-1 suite must run without it.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st   # noqa: E402
+
+from repro.core import aggregation as agg                  # noqa: E402
+from repro.core.compression import topk_compress           # noqa: E402
+from repro.core.selection import RandomSelector            # noqa: E402
+from repro.core.estimator import WorkerProfile             # noqa: E402
+
+
+def _tree(rng, scale=1.0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(rng))
+    return {"a": jax.random.normal(k1, (7, 5)) * scale,
+            "b": {"c": jax.random.normal(k2, (11,)) * scale}}
+
+
+@given(st.integers(0, 30))
+@settings(deadline=None, max_examples=20)
+def test_staleness_weights_monotone_decreasing(s):
+    assert agg.linear_weight(s + 1) < agg.linear_weight(s) <= 1.0
+    assert agg.polynomial_weight(s + 1) < agg.polynomial_weight(s) <= 1.0
+    assert agg.exponential_weight(s + 1) < agg.exponential_weight(s) <= 1.0
+
+
+@given(st.lists(st.integers(0, 10), min_size=2, max_size=6))
+@settings(deadline=None, max_examples=20)
+def test_weighted_fedavg_convexity(stalenesses):
+    """Aggregate stays inside the convex hull of the inputs (per leaf)."""
+    trees = [_tree(i) for i in range(len(stalenesses))]
+    ups = [agg.WorkerUpdate(weights=t, staleness=s, n_data=1)
+           for t, s in zip(trees, stalenesses)]
+    out = agg.weighted_fedavg(ups)
+    for leaf_out, *leaf_ins in zip(jax.tree.leaves(out),
+                                   *[jax.tree.leaves(t) for t in trees]):
+        lo = jnp.min(jnp.stack(leaf_ins), axis=0)
+        hi = jnp.max(jnp.stack(leaf_ins), axis=0)
+        assert bool(jnp.all(leaf_out >= lo - 1e-5))
+        assert bool(jnp.all(leaf_out <= hi + 1e-5))
+
+
+@given(st.floats(0.05, 0.9))
+@settings(deadline=None, max_examples=10)
+def test_topk_keeps_fraction(frac):
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    kept, mask = topk_compress(x, frac)
+    assert int(mask.sum()) >= int(x.size * frac) * 0.9
+    # kept values are exactly x on the mask
+    assert jnp.allclose(kept, x * mask)
+
+
+def _profiles(freqs):
+    return [WorkerProfile(f"w{i}", cpu_freq=f, cpu_prop=1.0, bandwidth=1e9,
+                          n_batches=1) for i, f in enumerate(freqs)]
+
+
+@given(st.integers(1, 10))
+@settings(deadline=None, max_examples=10)
+def test_random_selector_size(k):
+    sel = RandomSelector(k=k, seed=1)
+    profs = _profiles([1.0] * 10)
+    assert len(sel.select(profs)) == min(k, 10)
