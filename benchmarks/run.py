@@ -10,9 +10,11 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 
 def main() -> None:
-    from benchmarks import agg_bench, fl_figures, roofline
+    from benchmarks import agg_bench, fl_figures, roofline, wire_bench
 
     agg_bench.main()
+    print()
+    wire_bench.main()
     print()
 
     print("name,us_per_call,derived")

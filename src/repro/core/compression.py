@@ -8,14 +8,24 @@ the standard toolbox):
 
 Compression is applied to *deltas* (worker - base), never raw weights, so
 the reconstruction error contracts under error feedback.
+
+Since the transport layer landed (``core/transport.py``), the flat-vector
+codecs there are the primary implementation: ``ErrorFeedbackCompressor``
+packs the delta pytree once into a contiguous f32 buffer
+(``flatbuf.ParamBundle``) and runs the fused global top-k(+int8) encode —
+one pass, coordinates ranked across the whole model.  The per-leaf pytree
+implementation below is kept as the reference path (``REPRO_AGG_PATH=tree``
+forces it; non-packable trees fall back to it automatically).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import os
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from . import flatbuf
 
 
 def topk_compress(x: jnp.ndarray, frac: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -37,26 +47,70 @@ def int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     return q.astype(jnp.float32) * scale
 
 
-@dataclass
 class ErrorFeedbackCompressor:
-    """EF-topk(+int8) over pytrees of deltas. State: per-leaf residuals."""
-    frac: float = 0.1
-    quantize: bool = True
-    residual: Optional[object] = None
+    """EF-topk(+int8) over pytrees of deltas.
+
+    State is ONE flat residual vector (global top-k over the packed buffer);
+    ``.residual`` exposes it as a pytree for inspection. The per-leaf
+    reference path keeps a pytree residual instead."""
+
+    def __init__(self, frac: float = 0.1, quantize: bool = True,
+                 residual: Optional[object] = None):
+        self.frac = frac
+        self.quantize = quantize
+        self._res_tree = residual      # per-leaf reference path state
+        self._res_vec = None           # flat fast-path state
+        self._bundle = None
+
+    @property
+    def residual(self):
+        if self._res_vec is not None:
+            return self._bundle.unpack(self._res_vec)
+        return self._res_tree
+
+    @residual.setter
+    def residual(self, tree):
+        self._res_tree = tree
+        self._res_vec = None     # flat path re-seeds from the tree
 
     def compress(self, delta_tree):
         """Returns (reconstructed_tree, bytes_on_wire). Residuals update.
 
+        Fast path: pack once, one fused global top-k(+int8) pass over the
+        contiguous buffer (``transport.ef_topk_encode``), unpack. Wire cost
+        follows the transport codec table: one kept-coordinate bitmap, one
+        scale if quantising, ``kept * itemsize`` payload."""
+        if (os.environ.get("REPRO_AGG_PATH") == "tree"
+                or not flatbuf.packable(delta_tree)):
+            return self._compress_tree(delta_tree)
+        from . import transport   # deferred: transport imports kernels
+        bundle = flatbuf.bundle_for(delta_tree)
+        self._bundle = bundle
+        vec = bundle.pack(delta_tree)
+        if self._res_vec is None:
+            # seed from a caller-provided / tree-path residual if present
+            self._res_vec = (bundle.pack(self._res_tree)
+                             if self._res_tree is not None
+                             else jnp.zeros_like(vec))
+            self._res_tree = None
+        _, recon, self._res_vec, wire_bytes = transport.ef_topk_encode(
+            vec + self._res_vec, n_params=bundle.n_params, frac=self.frac,
+            quantize=self.quantize)
+        return bundle.unpack(recon), wire_bytes
+
+    def _compress_tree(self, delta_tree):
+        """Per-leaf reference: leaf-local top-k thresholds and scales.
+
         Mask counts accumulate on-device and sync to the host ONCE per tree
         — a per-leaf ``int(mask.sum())`` would force a device→host round
         trip inside the hot loop for every leaf."""
-        if self.residual is None:
-            self.residual = jax.tree.map(jnp.zeros_like, delta_tree)
+        if self._res_tree is None:
+            self._res_tree = jax.tree.map(jnp.zeros_like, delta_tree)
         wire_bytes = 0
         kept_counts = []
         recon, new_res = [], []
         leaves, treedef = jax.tree.flatten(delta_tree)
-        res_leaves = jax.tree.leaves(self.residual)
+        res_leaves = jax.tree.leaves(self._res_tree)
         for d, r in zip(leaves, res_leaves):
             x = d + r
             kept, mask = topk_compress(x, self.frac)
@@ -70,7 +124,7 @@ class ErrorFeedbackCompressor:
             new_res.append(x - kept)
         payload_itemsize = 1 if self.quantize else 4      # int8 vs f32
         wire_bytes += int(jnp.sum(jnp.stack(kept_counts))) * payload_itemsize
-        self.residual = jax.tree.unflatten(treedef, new_res)
+        self._res_tree = jax.tree.unflatten(treedef, new_res)
         return jax.tree.unflatten(treedef, recon), wire_bytes
 
     def uncompressed_bytes(self, delta_tree) -> int:

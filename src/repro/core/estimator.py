@@ -10,12 +10,18 @@ form of the same heuristic).
 
 Transmission time is *measured*, not profiled — the thesis transmits the
 randomly-initialised weights once to each worker because its FL channel is
-separate from FogBus2's (§3.4.4). ``measure_transmit`` mirrors that.
+separate from FogBus2's (§3.4.4). ``observe_transmit`` mirrors that, but
+stores the measurement as a *bandwidth* (measured seconds per measured
+byte): with the transport layer's codecs the payload size varies per
+direction and per codec, so a fixed measured time would mis-estimate every
+transfer whose size differs from the first one. ``t_transmit`` scales the
+measured time by ``requested_bytes / measured_bytes`` — for a request of
+exactly the measured size this returns the measured time bit-for-bit.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 
 @dataclass
@@ -37,7 +43,8 @@ class TimeEstimator:
         self.t_onebatch_server = t_onebatch_server
         # measured values override estimates once a worker has responded
         self._measured_t_one: Dict[str, float] = {}
-        self._measured_t_tx: Dict[str, float] = {}
+        # worker -> (measured seconds, measured bytes): a bandwidth sample
+        self._measured_tx: Dict[str, Tuple[float, int]] = {}
 
     # --- eq 3.4 ---
     def t_one(self, p: WorkerProfile) -> float:
@@ -49,14 +56,28 @@ class TimeEstimator:
         return per_batch * max(p.n_batches, 0)
 
     def t_transmit(self, p: WorkerProfile, model_bytes: int) -> float:
-        if p.worker_id in self._measured_t_tx:
-            return self._measured_t_tx[p.worker_id]
+        """Estimated seconds to move ``model_bytes`` over the worker's link:
+        measured bandwidth once a transfer has been observed, the profile's
+        nominal bandwidth before that. Always linear in the payload size."""
+        m = self._measured_tx.get(p.worker_id)
+        if m is not None:
+            t_meas, bytes_meas = m
+            return t_meas * (model_bytes / max(bytes_meas, 1))
         return model_bytes / max(p.bandwidth, 1.0)
+
+    def bandwidth(self, worker_id: str) -> Optional[float]:
+        """Measured bytes/s for a worker, or None before any observation."""
+        m = self._measured_tx.get(worker_id)
+        if m is None:
+            return None
+        t_meas, bytes_meas = m
+        return bytes_meas / max(t_meas, 1e-12)
 
     # --- measurement feedback (thesis: 'after any worker ... the actual
     # time consumed for communication and training is updated') ---
     def observe_training(self, worker_id: str, t_one_measured: float):
         self._measured_t_one[worker_id] = t_one_measured
 
-    def observe_transmit(self, worker_id: str, t_tx_measured: float):
-        self._measured_t_tx[worker_id] = t_tx_measured
+    def observe_transmit(self, worker_id: str, t_tx_measured: float,
+                         n_bytes: int):
+        self._measured_tx[worker_id] = (t_tx_measured, int(n_bytes))

@@ -20,6 +20,7 @@ from .estimator import TimeEstimator, WorkerProfile
 from .events import EventLoop
 from .selection import make_selector
 from .server import AggregationServer, HistoryPoint, run_sequential
+from .transport import Transport
 from .worker import FLWorker
 
 # thesis tables 4.1 (10 workers): batches allocated per worker
@@ -136,11 +137,16 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
            selector_kw: Optional[dict] = None, server_freq: float = 3.0,
            async_alpha: float = 1.0, async_stale_pow: float = 0.0,
            async_min_updates: int = 1, async_delta: bool = False,
-           async_latest_table: bool = True) -> List[HistoryPoint]:
+           async_latest_table: bool = True, transport: str = "raw",
+           transport_frac: float = 0.1) -> List[HistoryPoint]:
     loop = EventLoop()
     est = TimeEstimator(server_freq=server_freq,
                         t_onebatch_server=setup.per_batch_server)
-    sel = make_selector(selector, est, setup.model_bytes,
+    # one codec'd weight-exchange path for every transfer; the selection
+    # policies price their eq-3.4 time budget from its expected wire bytes
+    tr = Transport(setup.weights0, codec=transport, frac=transport_frac,
+                   raw_bytes=setup.model_bytes)
+    sel = make_selector(selector, est, tr.expected_oneway_bytes,
                         **(selector_kw or {}))
     server = AggregationServer(
         weights=setup.weights0, loop=loop, estimator=est, selector=sel,
@@ -149,7 +155,7 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
         max_rounds=max_rounds, target_accuracy=target_accuracy,
         async_alpha=async_alpha, async_stale_pow=async_stale_pow,
         async_min_updates=async_min_updates, async_delta=async_delta,
-        async_latest_table=async_latest_table)
+        async_latest_table=async_latest_table, transport=tr)
     for prof, shard in zip(setup.profiles, setup.shards):
         w = FLWorker(prof.worker_id, profile=prof, data=shard,
                      train_fn=setup.train_fn, loop=loop,

@@ -24,22 +24,15 @@ stays zero through every merge.
 """
 from __future__ import annotations
 
-import os
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import fedavg_agg
+from repro.kernels import fedavg_agg, pallas_flags
 
 BLOCK = 512          # kernel tile width; pack pads N up to a multiple
-
-
-def _use_pallas_default() -> bool:
-    if os.environ.get("REPRO_FLAT_PALLAS"):
-        return os.environ["REPRO_FLAT_PALLAS"] != "0"
-    return jax.default_backend() == "tpu"
 
 
 def packable(tree) -> bool:
@@ -69,6 +62,10 @@ class ParamBundle:
         off = np.concatenate([[0], np.cumsum(self.sizes)])
         self.offsets = tuple(int(o) for o in off[:-1])
         self.n_params = int(off[-1])
+        # bytes of the model at its native dtypes — what a raw (uncoded)
+        # wire transfer of this structure costs (core/transport.py)
+        self.raw_bytes = int(sum(n * jnp.dtype(d).itemsize
+                                 for n, d in zip(self.sizes, self.dtypes)))
         self.padded_size = -(-self.n_params // BLOCK) * BLOCK
         self._pack = jax.jit(self._pack_impl)
         self._unpack = jax.jit(self._unpack_impl)
@@ -79,6 +76,12 @@ class ParamBundle:
         self._pack_rows = jax.jit(
             lambda rows, trees: rows.at[:len(trees)].set(
                 self._pack_many_impl(trees)).at[len(trees):].set(0.0),
+            donate_argnums=(0,))
+        # same row-landing for already-packed vectors (the transport layer
+        # decodes payloads straight to flat vectors — no pytree intermediate)
+        self._set_rows = jax.jit(
+            lambda rows, vecs: rows.at[:len(vecs)].set(
+                jnp.stack(vecs)).at[len(vecs):].set(0.0),
             donate_argnums=(0,))
 
     # --- impls (jitted once per bundle) ---
@@ -162,21 +165,13 @@ _weighted_sum_jit = jax.jit(_weighted_sum,
                             static_argnames=("use_pallas", "interpret"))
 
 
-def _flags(use_pallas, interpret):
-    if use_pallas is None:
-        use_pallas = _use_pallas_default()
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    return bool(use_pallas), bool(interpret)
-
-
 def fused_merge(server_flat, rows, wvec, use_pallas: Optional[bool] = None,
                 interpret: Optional[bool] = None):
     """One-pass ``wvec[0]*server + wvec[1:] @ rows`` on packed buffers.
 
     ``server_flat`` is donated — callers must treat it as consumed.
     """
-    use_pallas, interpret = _flags(use_pallas, interpret)
+    use_pallas, interpret = pallas_flags(use_pallas, interpret)
     return _fused_mix_jit(server_flat, rows, jnp.asarray(wvec, jnp.float32),
                           use_pallas=use_pallas, interpret=interpret)
 
@@ -187,7 +182,7 @@ def fused_weighted_sum(rows, w, use_pallas: Optional[bool] = None,
     aggregate case must not read the server buffer at all: the reference
     ``mix_into`` short-circuits there, and ``0 * server`` would turn a
     non-finite server model into NaN instead of replacing it)."""
-    use_pallas, interpret = _flags(use_pallas, interpret)
+    use_pallas, interpret = pallas_flags(use_pallas, interpret)
     return _weighted_sum_jit(rows, jnp.asarray(w, jnp.float32),
                              use_pallas=use_pallas, interpret=interpret)
 
@@ -242,10 +237,24 @@ class FlatServerState:
         Returns the merged pytree (original dtypes); the packed result is
         cached so next round's merge skips re-packing the server model.
         """
-        w = normalized_weights(weights)
         n = len(update_trees)
         self._ensure_capacity(n)
         self._rows = self.bundle.pack_into(self._rows, update_trees)
+        return self._merge_rows_tail(server_tree, n, weights, alpha)
+
+    def merge_rows(self, server_tree, update_vecs: Sequence,
+                   weights: Sequence[float], alpha: float = 1.0):
+        """Same fused merge, but the updates are already-packed flat vectors
+        (``(padded_size,)`` f32) — the transport layer's decode path lands
+        straight in the persistent row buffer with no pytree intermediate."""
+        n = len(update_vecs)
+        self._ensure_capacity(n)
+        self._rows = self.bundle._set_rows(self._rows, tuple(update_vecs))
+        return self._merge_rows_tail(server_tree, n, weights, alpha)
+
+    def _merge_rows_tail(self, server_tree, n: int,
+                         weights: Sequence[float], alpha: float):
+        w = normalized_weights(weights)
         if alpha >= 1.0:
             # replace-on-aggregate: no server term (matches mix_into's
             # short-circuit; also skips the server read entirely)
@@ -272,3 +281,19 @@ class FlatServerState:
         out = fused_merge(cur, rows, np.asarray([1.0, 1.0, -1.0], np.float32),
                           self.use_pallas)
         return self.bundle.unpack(out)
+
+    def delta_vec(self, cur_tree, new_vec, base_vec) -> jnp.ndarray:
+        """``cur + (new - base)`` where new/base are already-packed flat
+        vectors; returns the packed result (async_delta on the transport
+        fast path keeps everything in flat-vector space).
+
+        Reuses the packed server mirror when ``cur_tree`` is the tree the
+        last merge produced — no fresh O(N) pack per response. The mirror
+        is consumed (donated into the fused op); a following alpha<1 merge
+        re-packs, but the default async_delta aggregate (alpha>=1) never
+        reads the server buffer at all."""
+        rows = jnp.stack([new_vec, base_vec])
+        cur = self._server_buffer(cur_tree)
+        return fused_merge(cur, rows,
+                           np.asarray([1.0, 1.0, -1.0], np.float32),
+                           self.use_pallas)

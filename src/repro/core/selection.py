@@ -23,9 +23,19 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence
+from typing import Callable, Dict, List, Sequence, Union
 
 from .estimator import TimeEstimator, WorkerProfile
+
+# the T_transmit term of the time budget is priced per *expected wire
+# bytes*: a plain int (the thesis' full model size) or a zero-arg callable
+# (the transport layer's expected codec'd round-trip, evaluated per select
+# so compressed codecs admit slow-link workers earlier)
+BytesSpec = Union[int, Callable[[], int]]
+
+
+def _resolve_bytes(model_bytes: BytesSpec) -> int:
+    return int(model_bytes()) if callable(model_bytes) else int(model_bytes)
 
 
 class Selector:
@@ -63,7 +73,7 @@ class RMinRMaxSelector(Selector):
     """Algorithm 1."""
     name = "rmin_rmax"
 
-    def __init__(self, estimator: TimeEstimator, model_bytes: int,
+    def __init__(self, estimator: TimeEstimator, model_bytes: BytesSpec,
                  rmin: float = 5.0, rmax: float = 5.0):
         self.est = estimator
         self.model_bytes = model_bytes
@@ -75,10 +85,11 @@ class RMinRMaxSelector(Selector):
         alive = [w for w in workers if not w.failed]
         if not alive:
             return []
+        nbytes = _resolve_bytes(self.model_bytes)
         t_min = {w.worker_id: self.est.t_one(w) * self.rmin +
-                 self.est.t_transmit(w, self.model_bytes) for w in alive}
+                 self.est.t_transmit(w, nbytes) for w in alive}
         t_max = {w.worker_id: self.est.t_one(w) * self.rmax +
-                 self.est.t_transmit(w, self.model_bytes) for w in alive}
+                 self.est.t_transmit(w, nbytes) for w in alive}
         t_minimum = min(t_max.values())
         return [w.worker_id for w in alive if t_min[w.worker_id] <= t_minimum]
 
@@ -93,7 +104,7 @@ class TimeBasedSelector(Selector):
     """Algorithm 2 (the thesis' winning policy)."""
     name = "time_based"
 
-    def __init__(self, estimator: TimeEstimator, model_bytes: int,
+    def __init__(self, estimator: TimeEstimator, model_bytes: BytesSpec,
                  r: int = 10, T0: float = 0.0, accuracy_threshold: float = 0.01):
         self.est = estimator
         self.model_bytes = model_bytes
@@ -105,7 +116,7 @@ class TimeBasedSelector(Selector):
 
     def _t_total(self, w: WorkerProfile) -> float:
         return self.est.t_one(w) * self.r + \
-            self.est.t_transmit(w, self.model_bytes)
+            self.est.t_transmit(w, _resolve_bytes(self.model_bytes))
 
     def select(self, workers):
         alive = [w for w in workers if not w.failed]
@@ -124,8 +135,8 @@ class TimeBasedSelector(Selector):
         self._last_acc = accuracy
 
 
-def make_selector(kind: str, estimator: TimeEstimator, model_bytes: int,
-                  **kw) -> Selector:
+def make_selector(kind: str, estimator: TimeEstimator,
+                  model_bytes: BytesSpec, **kw) -> Selector:
     if kind == "all":
         return AllSelector()
     if kind == "random":

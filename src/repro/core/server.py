@@ -20,6 +20,7 @@ import jax
 
 from . import aggregation as agg
 from . import flatbuf
+from . import transport as transport_mod
 from .estimator import TimeEstimator, WorkerProfile
 from .events import EventLoop
 from .selection import Selector
@@ -34,6 +35,8 @@ class HistoryPoint:
     accuracy: float
     n_updates: int
     selected: int
+    up_bytes: int = 0        # cumulative worker->server wire bytes so far
+    down_bytes: int = 0      # cumulative server->worker wire bytes so far
 
 
 class AggregationServer:
@@ -45,7 +48,8 @@ class AggregationServer:
                  straggler_timeout_factor: float = 4.0,
                  async_alpha: float = 1.0, async_stale_pow: float = 0.0,
                  async_min_updates: int = 1, async_delta: bool = False,
-                 async_latest_table: bool = True):
+                 async_latest_table: bool = True,
+                 transport="raw"):
         assert mode in ("sync", "async")
         self.address = "server://aggregator"
         self.weights = weights
@@ -85,6 +89,20 @@ class AggregationServer:
         if (flatbuf.packable(weights)
                 and os.environ.get("REPRO_AGG_PATH") != "tree"):
             self._flat = flatbuf.FlatServerState(weights)
+        # single weight-exchange path: every transfer is a codec'd Payload
+        # with exact wire bytes (core/transport.py)
+        if isinstance(transport, str):
+            transport = transport_mod.Transport(weights, codec=transport,
+                                                raw_bytes=model_bytes)
+        self.transport = transport
+        self.total_up_bytes = 0
+        self.total_down_bytes = 0
+        # decode straight into packed flat rows when the merge fast path is
+        # active AND the aggregator has a scalar-weight form (otherwise the
+        # pytree AGGREGATORS fallback needs trees in the cache)
+        self._use_vec = (self._flat is not None
+                         and self.transport.flat_capable
+                         and aggregator in agg.UPDATE_WEIGHT_FNS)
 
         self.workers: Dict[str, FLWorker] = {}
         self.warehouse = DataWarehouse()
@@ -133,7 +151,8 @@ class AggregationServer:
             acc = self.history[-1].accuracy
             self.selector.on_round_end(acc)
             self.history.append(HistoryPoint(self.loop.now, self.version, acc,
-                                             0, 0))
+                                             0, 0, self.total_up_bytes,
+                                             self.total_down_bytes))
             self.version += 1
             self.loop.schedule(1e-3, self._dispatch_round)
             return
@@ -144,11 +163,14 @@ class AggregationServer:
         for wid in selected:
             self._send_train(wid, base_version)
         if self.mode == "sync":
-            # straggler timeout: aggregate with whatever arrived
+            # straggler timeout: aggregate with whatever arrived; the round
+            # trip costs the raw model down plus the codec'd response up
+            down_b = self.transport.expected_down_bytes()
+            up_b = self.transport.expected_up_bytes()
             t_max = max(self.est.t_one(self.workers[w].profile) *
                         self.epochs_per_round +
-                        2 * self.est.t_transmit(self.workers[w].profile,
-                                                self.model_bytes)
+                        self.est.t_transmit(self.workers[w].profile, down_b) +
+                        self.est.t_transmit(self.workers[w].profile, up_b)
                         for w in selected)
             self.loop.schedule(self.straggler_timeout_factor * max(t_max, 1e-3),
                                self._round_timeout, rid)
@@ -159,26 +181,52 @@ class AggregationServer:
             return
         if self.async_delta:
             self._dispatch_base[wid] = self.weights
-        w.train_async(self.pointer, self.weights, base_version,
-                      self.epochs_per_round, self.model_bytes,
-                      self._on_response)
+        link = self.transport.link(wid)
+        down = link.encode_down(self.weights)
+        self.total_down_bytes += down.wire_bytes
+        w.train_async(self.pointer, down, base_version,
+                      self.epochs_per_round, link, self._on_response)
 
     # --- response handling (thesis §3.3.3 steps 8-9) ---
     def _on_response(self, res: TrainResult):
-        if self.done:
-            return
         w = self.workers.get(res.worker_id)
         if w is None:
             return
+        # redeem FIRST (and unconditionally): redemption deletes the stored
+        # payload, so stale/late responses can't leak a model-sized buffer
+        # plus a live ticket in the worker's warehouse forever
+        payload = w.warehouse.redeem_ticket(res.weights_ticket)
+        if self.done:
+            return
+        self.total_up_bytes += res.up_bytes   # the bytes crossed the wire
         self.est.observe_training(res.worker_id,
                                   res.t_train / max(res.epochs, 1))
+        self.est.observe_transmit(res.worker_id, res.t_up, res.up_bytes)
         staleness = self.version - res.base_version
         if self.mode == "sync" and staleness > 0:
-            return  # thesis: sync ignores results that straddle an aggregation
-        weights = w.warehouse.redeem_ticket(res.weights_ticket)
+            # thesis: sync ignores results that straddle an aggregation —
+            # but the encoded mass must go back into the link's EF residual
+            # or it is silently lost from the error-feedback contract
+            self.transport.link(res.worker_id).restore_uplink(payload)
+            return
+        link = self.transport.link(res.worker_id)
+        if self._use_vec:
+            # fast path: decode straight to a packed flat vector (for
+            # compressed codecs: base + dequantised delta in one fused
+            # pass); it lands in the (W, N) row buffer at merge time
+            weights = link.decode_up_vec(payload)
+        else:
+            weights = link.decode_up_tree(payload)
         if self.async_delta and self.mode == "async":
             base = self._dispatch_base.get(res.worker_id, self.weights)
-            if self._flat is not None:
+            if self._use_vec:
+                # delta-accumulate in flat-vector space: cur + (new - base);
+                # delta codecs already hold the packed base on the link
+                base_vec = (link.tx_base if self.transport.spec.delta
+                            else self._flat.bundle.pack(base))
+                weights = self._flat.delta_vec(self.weights, weights,
+                                               base_vec)
+            elif self._flat is not None:
                 # delta-accumulate on packed buffers: cur + (new - base)
                 # in one fused pass instead of a per-leaf tree-map
                 weights = self._flat.apply_delta(self.weights, weights, base)
@@ -222,10 +270,16 @@ class AggregationServer:
         if self.done or rid != self._round_id or not self._round_open:
             return
         if self.mode == "sync" and self._outstanding:
-            # mark non-responders failed so selection stops picking them
+            # mark non-responders failed so selection stops picking them,
+            # and cancel exactly OUR in-flight transfer from each (round
+            # closed: the unredeemed ticket is dead weight, and the link's
+            # EF residual gets the undelivered mass back) — scoped per
+            # dispatch so other servers' tickets in the same warehouse
+            # are untouched
             for wid in list(self._outstanding):
                 if wid in self.workers:
                     self.workers[wid].profile.failed = True
+                    self.workers[wid].cancel_inflight(self.pointer)
             self._outstanding.clear()
             if self._cache:
                 self._aggregate()
@@ -245,9 +299,14 @@ class AggregationServer:
         else:
             alpha = 1.0
         ws = agg.update_weights(self.aggregator, self._cache)
-        if self._flat is not None and ws is not None:
-            # fast path: staleness-weighted sum + alpha-mix fused into one
-            # pass over the packed flat buffers (kernels/fedavg_agg.py)
+        if self._use_vec and ws is not None:
+            # fast path: responses were decoded straight to packed flat
+            # vectors; land them in the (W, N) row buffer and fuse the
+            # staleness-weighted sum + alpha-mix in one pass
+            self.weights = self._flat.merge_rows(
+                self.weights, [u.weights for u in self._cache], ws, alpha)
+        elif self._flat is not None and ws is not None:
+            # cache holds pytrees (non-flat transport): pack-and-merge
             self.weights = self._flat.merge(
                 self.weights, [u.weights for u in self._cache], ws, alpha)
         else:
@@ -262,7 +321,8 @@ class AggregationServer:
         acc = self._accuracy()
         self.selector.on_round_end(acc)
         self.history.append(HistoryPoint(self.loop.now, self.version, acc,
-                                         n_upd, n_upd))
+                                         n_upd, n_upd, self.total_up_bytes,
+                                         self.total_down_bytes))
         if self.target_accuracy is not None and acc >= self.target_accuracy:
             self._finish()
         elif self.version >= self.max_rounds:

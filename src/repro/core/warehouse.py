@@ -134,5 +134,27 @@ class DataWarehouse:
         return cred
 
     def redeem_ticket(self, cred: str) -> Any:
+        """Redeem a one-time credential: returns the value and *deletes* the
+        stored object — a ticketed transfer is a hand-off, and keeping the
+        source copy alive after redemption leaks a model-sized buffer per
+        response. A second redeem of the same credential raises KeyError."""
         uid = self._tickets.pop(cred)    # one-time: second redeem raises
-        return self.get(uid)
+        value = self.get(uid)
+        self.delete(uid)
+        return value
+
+    def has_ticket(self, cred: str) -> bool:
+        return cred in self._tickets
+
+    def revoke_ticket(self, cred: str) -> None:
+        """Drop an unredeemed credential and delete its stored object (the
+        transfer will never happen — e.g. the sender died mid-transmit)."""
+        uid = self._tickets.pop(cred, None)
+        if uid is not None and uid in self:
+            self.delete(uid)
+
+    def drop_tickets(self) -> None:
+        """Revoke every outstanding credential (round closed: responses that
+        were never redeemed are dead weight)."""
+        for cred in list(self._tickets):
+            self.revoke_ticket(cred)

@@ -16,6 +16,7 @@ import jax
 
 from .estimator import WorkerProfile
 from .events import EventLoop
+from .transport import Link, Payload
 from .warehouse import DataWarehouse, Pointer
 
 
@@ -27,6 +28,8 @@ class TrainResult:
     epochs: int
     n_batches: int
     t_train: float            # measured training time (simulated clock)
+    t_up: float = 0.0         # measured uplink transmit time
+    up_bytes: int = 0         # exact wire bytes of the encoded response
 
 
 class FLWorker:
@@ -41,6 +44,10 @@ class FLWorker:
         self.loop = loop
         self.warehouse = DataWarehouse()
         self.server_pointers: List[Pointer] = []   # ACL (thesis §3.3.3 step 4)
+        # in-flight uplink per server: (ticket, payload, link) from ticket
+        # issue until delivery — lets a server cancel exactly its own
+        # transfer (round closed) without touching other servers' tickets
+        self._inflight: Dict[Pointer, tuple] = {}
         self.busy = False
         # ground-truth speed (may differ from the estimator's eq-3.4 guess)
         self._per_batch_time = per_batch_time if per_batch_time is not None \
@@ -53,6 +60,16 @@ class FLWorker:
     def accepts(self, server_pointer: Pointer) -> bool:
         return server_pointer in self.server_pointers
 
+    def cancel_inflight(self, server_pointer: Pointer) -> None:
+        """Cancel this server's in-flight uplink (its round closed): revoke
+        the one-time credential, delete the stored payload, and credit the
+        encoded mass back into the link's error-feedback residual."""
+        entry = self._inflight.pop(server_pointer, None)
+        if entry is not None:
+            ticket, up, link = entry
+            self.warehouse.revoke_ticket(ticket)
+            link.restore_uplink(up)
+
     def true_t_one(self) -> float:
         return self._per_batch_time * max(self.profile.n_batches, 0)
 
@@ -60,31 +77,77 @@ class FLWorker:
         return model_bytes / max(self.profile.bandwidth, 1.0)
 
     # --- training API (thesis §3.3.3) ---
-    def train_async(self, server_pointer: Pointer, weights, base_version: int,
-                    epochs: int, model_bytes: int,
+    def train_async(self, server_pointer: Pointer, down: Payload,
+                    base_version: int, epochs: int, link: Link,
                     on_done: Callable[[TrainResult], None]):
-        """See class docstring."""
-        """Simulates: fetch server weights (T_transmit) -> train (T_one*r)
-        -> respond. ``on_done`` fires on the event loop at the right time."""
+        """Simulates one train instruction end to end: fetch the server
+        weights (T_transmit over the actual downlink payload bytes), train
+        (T_one * r), encode the response through the link's codec, and
+        respond (T_transmit over the actual encoded uplink payload bytes).
+        ``on_done`` fires on the event loop at the right time.
+
+        For codecs whose uplink size is known before training (raw, delta,
+        int8) the whole chain is one scheduled event; top-k codecs must
+        train first to know how many coordinates survive the threshold, so
+        they schedule the respond leg separately after encoding."""
         if not self.accepts(server_pointer) or self.profile.failed:
             return  # silently drop: a failed/foreign request never responds
         self.busy = True
-        t_fetch = self.true_t_transmit(model_bytes)
+        t_fetch = self.true_t_transmit(down.wire_bytes)
         t_train = self.true_t_one() * epochs
+        weights = link.decode_down(down)
 
-        def _finish():
-            if self.profile.failed:      # died mid-training
-                self.busy = False
-                return
+        def _train():
             if len(self.data["x"]):
-                new_weights = self.train_fn(weights, self.data["x"],
-                                            self.data["y"], epochs)
-            else:
-                new_weights = weights    # no local data: echo (setup-3 zeros)
-            uid = self.warehouse.put(new_weights)
-            ticket = self.warehouse.issue_ticket(uid)
+                return self.train_fn(weights, self.data["x"],
+                                     self.data["y"], epochs)
+            return weights          # no local data: echo (setup-3 zeros)
+
+        def _deliver(ticket, t_up, up_bytes):
             self.busy = False
             on_done(TrainResult(self.worker_id, ticket, base_version, epochs,
-                                self.profile.n_batches, t_train))
-        self.loop.schedule(t_fetch + t_train +
-                           self.true_t_transmit(model_bytes), _finish)
+                                self.profile.n_batches, t_train,
+                                t_up=t_up, up_bytes=up_bytes))
+
+        up_bytes = link.upfront_up_bytes()
+        if up_bytes is not None:
+            def _finish():
+                if self.profile.failed:      # died mid-training
+                    self.busy = False
+                    return
+                up = link.encode_up(_train())
+                assert up.wire_bytes == up_bytes, (up.wire_bytes, up_bytes)
+                ticket = self.warehouse.issue_ticket(self.warehouse.put(up))
+                _deliver(ticket, self.true_t_transmit(up.wire_bytes),
+                         up.wire_bytes)
+            self.loop.schedule(t_fetch + t_train +
+                               self.true_t_transmit(up_bytes), _finish)
+            return
+
+        def _train_then_send():
+            if self.profile.failed:          # died mid-training
+                self.busy = False
+                return
+            up = link.encode_up(_train())
+            ticket = self.warehouse.issue_ticket(self.warehouse.put(up))
+            self._inflight[server_pointer] = (ticket, up, link)
+            t_up = self.true_t_transmit(up.wire_bytes)
+
+            def _send():
+                entry = self._inflight.get(server_pointer)
+                if entry is None or entry[0] != ticket:
+                    # this transfer was cancelled (round closed; ticket
+                    # revoked, EF mass restored). A newer dispatch may
+                    # already own the in-flight slot — leave it alone.
+                    if entry is None:
+                        self.busy = False
+                    return
+                self._inflight.pop(server_pointer)
+                if self.profile.failed:      # died mid-transmit
+                    self.warehouse.revoke_ticket(ticket)
+                    link.restore_uplink(up)
+                    self.busy = False
+                    return
+                _deliver(ticket, t_up, up.wire_bytes)
+            self.loop.schedule(t_up, _send)
+        self.loop.schedule(t_fetch + t_train, _train_then_send)

@@ -36,6 +36,25 @@ def reference_fedavg(stacked, weights):
                       weights.astype(jnp.float32)).astype(stacked.dtype)
 
 
+def reference_topk_quant_encode(x, thresh, scale):
+    """Oracle for the fused topk-threshold + int8 quantise encode: entries
+    with |x| >= thresh are linearly quantised to int8 (zero elsewhere); the
+    residual is the full reconstruction error (error-feedback memory).
+    x: (N,) f32; thresh, scale: scalars. Returns (q int8, residual f32)."""
+    x = x.astype(jnp.float32)
+    mask = jnp.abs(x) >= thresh
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0)
+    q = jnp.where(mask, q, 0.0).astype(jnp.int8)
+    recon = q.astype(jnp.float32) * scale
+    return q, x - recon
+
+
+def reference_dequant_add(q, scale, base):
+    """Oracle for the fused dequantise + delta-apply decode:
+    ``base + q * scale``. q: (N,) int8; base: (N,) f32; scale: scalar."""
+    return base.astype(jnp.float32) + q.astype(jnp.float32) * scale
+
+
 def reference_wkv(r, k, v, w, u):
     """Sequential WKV recurrence (the ground truth the chunked forms must
     match). r,k,v,w: (B,S,H,K); u: (H,K)."""

@@ -1,0 +1,139 @@
+"""Fused topk-threshold + int8 quantise/dequantise Pallas kernels.
+
+The transport layer's compressed codecs (``core/transport.py``) operate on
+the packed flat f32 buffer from ``core/flatbuf.ParamBundle``.  Encoding an
+update is elementwise once the global threshold and scale are known: mask
+entries below the top-k threshold, linearly quantise the survivors to int8,
+and remember the full reconstruction error as the error-feedback residual.
+A naive chain (mask -> quantise -> dequantise -> subtract) reads the buffer
+four times; these kernels stream each (1, BN) tile through VMEM once and
+emit both outputs (q, residual) in a single pass.  Decode fuses the
+dequantise with the delta-apply (``base + q * scale``), so a compressed
+response lands in the server's flat row buffer in one pass too.
+
+The XLA oracles live in ``kernels/ref.py`` (``reference_topk_quant_encode``
+/ ``reference_dequant_add``); the jitted dispatchers below route to them on
+non-TPU backends (interpret-mode Pallas would serialise per block on CPU)
+— identical numerics either way, parity-tested in tests/test_transport.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import pallas_flags, ref
+
+BLOCK = 512
+
+
+def _encode_kernel(ts_ref, x_ref, q_ref, r_ref):
+    """One tile: q = int8(round(x/scale)) where |x| >= thresh else 0;
+    residual = x - q*scale (the error-feedback memory, fused)."""
+    x = x_ref[...].astype(jnp.float32)        # (1, BN)
+    thresh = ts_ref[0, 0]
+    scale = ts_ref[0, 1]
+    mask = jnp.abs(x) >= thresh
+    q = jnp.clip(jnp.round(x / scale), -127.0, 127.0)
+    q = jnp.where(mask, q, 0.0).astype(jnp.int8)
+    q_ref[...] = q
+    r_ref[...] = (x - q.astype(jnp.float32) * scale).astype(r_ref.dtype)
+
+
+def _decode_kernel(s_ref, q_ref, b_ref, o_ref):
+    """One tile: o = base + q * scale (dequantise fused with delta-apply)."""
+    o_ref[...] = (b_ref[...].astype(jnp.float32)
+                  + q_ref[...].astype(jnp.float32) * s_ref[0, 0]
+                  ).astype(o_ref.dtype)
+
+
+def _encode_pallas(x, thresh, scale, block_n: int, interpret: bool):
+    N = x.shape[0]
+    block_n = min(block_n, N)
+    pad = (-N) % block_n
+    xr = x.reshape(1, N)
+    if pad:
+        xr = jnp.pad(xr, ((0, 0), (0, pad)))
+    Np = N + pad
+    ts = jnp.stack([jnp.asarray(thresh, jnp.float32),
+                    jnp.asarray(scale, jnp.float32)]).reshape(1, 2)
+    q, r = pl.pallas_call(
+        _encode_kernel,
+        grid=(Np // block_n,),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((1, Np), jnp.int8),
+                   jax.ShapeDtypeStruct((1, Np), jnp.float32)],
+        interpret=interpret,
+    )(ts, xr)
+    return q[0, :N], r[0, :N]
+
+
+def _decode_pallas(q, scale, base, block_n: int, interpret: bool):
+    N = q.shape[0]
+    block_n = min(block_n, N)
+    pad = (-N) % block_n
+    qr = q.reshape(1, N)
+    br = base.reshape(1, N)
+    if pad:
+        qr = jnp.pad(qr, ((0, 0), (0, pad)))
+        br = jnp.pad(br, ((0, 0), (0, pad)))
+    Np = N + pad
+    s = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _decode_kernel,
+        grid=(Np // block_n,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+            pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Np), jnp.float32),
+        interpret=interpret,
+    )(s, qr, br)
+    return out[0, :N]
+
+
+def _encode_impl(x, thresh, scale, block_n, use_pallas, interpret):
+    if use_pallas:
+        return _encode_pallas(x, thresh, scale, block_n, interpret)
+    return ref.reference_topk_quant_encode(x, thresh, scale)
+
+
+def _decode_impl(q, scale, base, block_n, use_pallas, interpret):
+    if use_pallas:
+        return _decode_pallas(q, scale, base, block_n, interpret)
+    return ref.reference_dequant_add(q, scale, base)
+
+
+_encode_jit = jax.jit(_encode_impl,
+                      static_argnames=("block_n", "use_pallas", "interpret"))
+_decode_jit = jax.jit(_decode_impl,
+                      static_argnames=("block_n", "use_pallas", "interpret"))
+
+
+def topk_quant_encode(x, thresh, scale, block_n: int = BLOCK,
+                      use_pallas=None, interpret=None):
+    """Fused encode over a packed flat buffer: mask |x| < thresh, int8
+    quantise the rest, and emit the error-feedback residual, in ONE pass.
+    x: (N,) f32; thresh/scale scalars. Returns (q int8 (N,), residual f32)."""
+    use_pallas, interpret = pallas_flags(use_pallas, interpret)
+    return _encode_jit(x, thresh, scale, block_n=block_n,
+                       use_pallas=use_pallas, interpret=interpret)
+
+
+def dequant_add(q, scale, base, block_n: int = BLOCK,
+                use_pallas=None, interpret=None):
+    """Fused decode: ``base + q * scale`` in one pass — a compressed delta
+    payload dequantises straight onto its base vector (no dense f32
+    intermediate for the delta)."""
+    use_pallas, interpret = pallas_flags(use_pallas, interpret)
+    return _decode_jit(q, scale, base, block_n=block_n,
+                       use_pallas=use_pallas, interpret=interpret)

@@ -215,19 +215,42 @@ def test_fl_round_delta_compressed_identity_compressor():
     assert _max_err(out, expect) < 1e-5
 
 
+def test_merge_rows_matches_merge():
+    """merge_rows (pre-packed flat vectors from the transport decode path)
+    == merge (pytree updates) for the same updates."""
+    server = _ragged_tree(40)
+    trees = [_ragged_tree(50 + i) for i in range(3)]
+    ws = [1.0, 0.5, 2.0]
+    b = flatbuf.bundle_for(server)
+    out_t = flatbuf.FlatServerState(server).merge(server, trees, ws, 0.6)
+    out_v = flatbuf.FlatServerState(server).merge_rows(
+        server, [b.pack(t) for t in trees], ws, 0.6)
+    assert _max_err(out_t, out_v) == 0.0
+
+
+def test_delta_vec_matches_apply_delta():
+    cur, new, base = _ragged_tree(1), _ragged_tree(2), _ragged_tree(3)
+    st = flatbuf.FlatServerState(cur)
+    b = st.bundle
+    out_v = b.unpack(st.delta_vec(cur, b.pack(new), b.pack(base)))
+    expect = flatbuf.FlatServerState(cur).apply_delta(cur, new, base)
+    assert _max_err(out_v, expect) == 0.0
+
+
 def test_server_aggregate_routes_through_flat(monkeypatch):
-    """The server's merge calls FlatServerState.merge (fast path), not the
-    pytree AGGREGATORS wrapper."""
+    """The server's merge lands decoded flat rows via
+    FlatServerState.merge_rows (fast path), not the pytree AGGREGATORS
+    wrapper."""
     from repro.core import TABLE_4_1, make_setup, run_fl
 
     calls = {"merge": 0}
-    orig = flatbuf.FlatServerState.merge
+    orig = flatbuf.FlatServerState.merge_rows
 
     def spy(self, *a, **k):
         calls["merge"] += 1
         return orig(self, *a, **k)
 
-    monkeypatch.setattr(flatbuf.FlatServerState, "merge", spy)
+    monkeypatch.setattr(flatbuf.FlatServerState, "merge_rows", spy)
     setup = make_setup(TABLE_4_1["mnist_even"], seed=0, noise=0.2,
                        batch_size=64, het="extreme")
     h = run_fl(setup, mode="sync", selector="all", epochs_per_round=10,

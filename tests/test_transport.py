@@ -1,0 +1,413 @@
+"""Transport layer: codec round-trips on packed flat buffers, exact wire-
+byte accounting (bitmap + scales + payload itemsize), per-link error
+feedback, the fused topk+int8 Pallas kernel vs its XLA oracle, bandwidth-
+learning estimation, warehouse ticket hygiene, and the end-to-end byte
+counters in HistoryPoint."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TABLE_4_1, make_setup, run_fl, time_to_accuracy
+from repro.core import flatbuf, transport
+from repro.core.compression import ErrorFeedbackCompressor
+from repro.core.estimator import TimeEstimator, WorkerProfile
+from repro.core.warehouse import DataWarehouse
+from repro.kernels import ref, topk_quant
+
+N_PARAMS = 1000      # {"a": (30,30), "b": (100,)} below
+
+
+def _model(seed, scale=1.0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    return {"a": jax.random.normal(ks[0], (30, 30)) * scale,
+            "b": jax.random.normal(ks[1], (100,)) * scale}
+
+
+def _vec_err(a, b):
+    return float(jnp.max(jnp.abs(a - b)))
+
+
+# ---------------- the fused kernel vs its XLA oracle ----------------
+
+@pytest.mark.parametrize("N", [100, 512, 777, 2048])
+def test_topk_quant_encode_kernel_matches_reference(N):
+    x = jax.random.normal(jax.random.PRNGKey(0), (N,))
+    thresh = float(jnp.sort(jnp.abs(x))[int(N * 0.9)])
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    q_p, r_p = topk_quant.topk_quant_encode(x, thresh, scale,
+                                            use_pallas=True, interpret=True)
+    q_r, r_r = ref.reference_topk_quant_encode(x, thresh, scale)
+    assert jnp.array_equal(q_p, q_r)
+    assert _vec_err(r_p, r_r) < 1e-6
+
+
+@pytest.mark.parametrize("N", [512, 333])
+def test_dequant_add_kernel_matches_reference(N):
+    q = jax.random.randint(jax.random.PRNGKey(1), (N,), -127, 128,
+                           dtype=jnp.int8)
+    base = jax.random.normal(jax.random.PRNGKey(2), (N,))
+    out_p = topk_quant.dequant_add(q, 0.013, base,
+                                   use_pallas=True, interpret=True)
+    out_r = ref.reference_dequant_add(q, 0.013, base)
+    assert _vec_err(out_p, out_r) < 1e-6
+
+
+def test_encode_decode_kernel_roundtrip_bounded_error():
+    """Quantisation error of the kept coordinates is bounded by scale/2."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (1024,))
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    q, resid = topk_quant.topk_quant_encode(x, 0.0, scale)
+    recon = topk_quant.dequant_add(q, scale, jnp.zeros_like(x))
+    assert float(jnp.max(jnp.abs(recon - x))) <= scale * 0.51
+    assert _vec_err(resid, x - recon) < 1e-6
+
+
+# ---------------- codec round trips + exact wire bytes ----------------
+
+def _roundtrip(codec, frac=0.1, seed=0):
+    base = _model(seed)
+    new = _model(seed + 1, scale=0.5)
+    t = transport.Transport(base, codec=codec, frac=frac)
+    link = t.link("w0")
+    down = link.encode_down(base)
+    assert down.wire_bytes == t.raw_bytes == 4 * N_PARAMS
+    assert link.decode_down(down) is base        # downlink is raw/lossless
+    up = link.encode_up(new)
+    vec = link.decode_up_vec(up)
+    tree = t.bundle.unpack(vec)
+    return t, link, up, vec, tree, base, new
+
+
+def test_raw_codec_exact_roundtrip():
+    t, link, up, vec, tree, base, new = _roundtrip("raw")
+    assert up.wire_bytes == 4 * N_PARAMS
+    assert all(jnp.array_equal(a, b) for a, b in
+               zip(jax.tree.leaves(tree), jax.tree.leaves(new)))
+
+
+def test_delta_codec_exact_roundtrip_and_bytes():
+    t, link, up, vec, tree, base, new = _roundtrip("delta")
+    assert up.wire_bytes == 4 * N_PARAMS
+    assert all(jnp.allclose(a, b, atol=1e-6) for a, b in
+               zip(jax.tree.leaves(tree), jax.tree.leaves(new)))
+
+
+def test_int8_codec_bytes_and_error_bound():
+    t, link, up, vec, tree, base, new = _roundtrip("int8")
+    assert up.wire_bytes == N_PARAMS + 4         # payload + one f32 scale
+    q, scale = up.data
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+              zip(jax.tree.leaves(tree), jax.tree.leaves(new)))
+    assert err <= float(scale) * 0.51
+
+
+def test_topk_ef_codec_bytes_spec():
+    t, link, up, vec, tree, base, new = _roundtrip("topk_ef", frac=0.1)
+    k = transport.topk_k(N_PARAMS, 0.1)
+    kept = int(jnp.sum(up.data != 0))
+    assert kept <= k                       # generic data: no threshold ties
+    assert up.wire_bytes == transport.bitmap_bytes(N_PARAMS) + 4 * kept
+    # what was dropped is exactly the link's EF residual
+    full = t.bundle.pack(new) - link.tx_base
+    assert _vec_err(link.residual, full - up.data) < 1e-6
+
+
+def test_topk_ef_int8_codec_bytes_spec():
+    t, link, up, vec, tree, base, new = _roundtrip("topk_ef+int8", frac=0.1)
+    q, scale = up.data
+    kept = int(jnp.sum(q != 0))
+    assert up.wire_bytes >= transport.bitmap_bytes(N_PARAMS) + 4 + kept
+    assert up.wire_bytes <= (transport.bitmap_bytes(N_PARAMS) + 4
+                             + transport.topk_k(N_PARAMS, 0.1))
+
+
+def test_expected_up_bytes_match_actual_for_deterministic_codecs():
+    for codec in ("raw", "delta", "int8"):
+        t, link, up, *_ = _roundtrip(codec)
+        assert up.wire_bytes == t.expected_up_bytes()
+        assert link.upfront_up_bytes() == up.wire_bytes
+    for codec in ("topk_ef", "topk_ef+int8"):
+        t, link, up, *_ = _roundtrip(codec)
+        assert link.upfront_up_bytes() is None
+        assert up.wire_bytes <= t.expected_up_bytes()
+
+
+def test_expected_oneway_bytes_raw_equals_model_bytes():
+    t = transport.Transport(_model(0), codec="raw")
+    assert t.expected_oneway_bytes() == t.raw_bytes
+    tc = transport.Transport(_model(0), codec="topk_ef+int8", frac=0.1)
+    assert tc.expected_oneway_bytes() < t.expected_oneway_bytes()
+
+
+def test_zero_delta_ships_almost_nothing():
+    """An echoing worker (no local data) must not pay full price: an all-
+    zero delta keeps nothing under the threshold tie-guard."""
+    base = _model(0)
+    t = transport.Transport(base, codec="topk_ef+int8", frac=0.1)
+    link = t.link("w0")
+    link.encode_down(base)
+    up = link.encode_up(base)                    # new == base: zero delta
+    assert up.wire_bytes == transport.bitmap_bytes(N_PARAMS) + 4
+    assert _vec_err(link.decode_up_vec(up), link.tx_base) == 0.0
+
+
+def test_unknown_codec_rejected():
+    with pytest.raises(ValueError):
+        transport.Transport(_model(0), codec="gzip")
+
+
+def test_nonpackable_only_raw():
+    with pytest.raises(ValueError):
+        transport.Transport({"a": "not-an-array"}, codec="int8")
+    t = transport.Transport({"a": "not-an-array"}, codec="raw",
+                            raw_bytes=123)
+    assert t.raw_bytes == 123 and not t.flat_capable
+
+
+# ---------------- error feedback across rounds ----------------
+
+def test_link_error_feedback_recovers_mass():
+    """Cumulative reconstructed deltas + residual == cumulative true deltas
+    (the EF contraction property, now per-link)."""
+    base = _model(0)
+    t = transport.Transport(base, codec="topk_ef", frac=0.2)
+    link = t.link("w0")
+    total_in = jnp.zeros((t.bundle.padded_size,))
+    total_out = jnp.zeros((t.bundle.padded_size,))
+    cur = base
+    for i in range(12):
+        link.encode_down(cur)
+        new = jax.tree.map(
+            lambda l, k=i: l + 0.01 * jax.random.normal(
+                jax.random.PRNGKey(100 + k), l.shape), cur)
+        up = link.encode_up(new)
+        total_in += t.bundle.pack(new) - link.tx_base
+        total_out += link.decode_up_vec(up) - link.tx_base
+        cur = t.bundle.unpack(link.decode_up_vec(up))
+    assert _vec_err(total_in, total_out + link.residual) < 1e-4
+
+
+def test_compressor_parity_with_flat_codec_single_leaf():
+    """The refactored pytree ErrorFeedbackCompressor == the flat codec on a
+    single-leaf tree (global top-k == per-leaf top-k there), including the
+    wire-byte count, for both the flat path and REPRO_AGG_PATH=tree."""
+    deltas = [{"g": jax.random.normal(jax.random.PRNGKey(i), (1000,))}
+              for i in range(4)]
+    for quantize in (False, True):
+        flat_c = ErrorFeedbackCompressor(frac=0.1, quantize=quantize)
+        res_vec = jnp.zeros((1024,))
+        for d in deltas:
+            bundle = flatbuf.bundle_for(d)
+            x = bundle.pack(d) + res_vec
+            _, recon, res_vec, wire = transport.ef_topk_encode(
+                x, n_params=1000, frac=0.1, quantize=quantize)
+            out, wire_c = flat_c.compress(d)
+            assert wire_c == wire
+            assert _vec_err(bundle.pack(out), recon) < 1e-6
+        assert _vec_err(bundle.pack(flat_c.residual), res_vec) < 1e-6
+
+
+def test_compressor_tree_path_still_works(monkeypatch):
+    monkeypatch.setenv("REPRO_AGG_PATH", "tree")
+    comp = ErrorFeedbackCompressor(frac=0.25, quantize=False)
+    d = {"g": jax.random.normal(jax.random.PRNGKey(0), (64, 8))}
+    recon, wire = comp.compress(d)
+    assert wire < 64 * 8 * 4
+    assert jax.tree.structure(comp.residual) == jax.tree.structure(d)
+
+
+# ---------------- estimator: measured bandwidth ----------------
+
+def test_estimator_learns_bandwidth_not_fixed_time():
+    est = TimeEstimator()
+    p = WorkerProfile("w0", bandwidth=10e6)
+    est.observe_transmit("w0", 0.5, 5_000_000)       # 10 MB/s measured
+    assert abs(est.t_transmit(p, 5_000_000) - 0.5) < 1e-12
+    # the estimate must SCALE with payload size (the pre-fix bug returned
+    # the fixed measured time for any requested size)
+    assert abs(est.t_transmit(p, 500_000) - 0.05) < 1e-12
+    assert abs(est.bandwidth("w0") - 10e6) < 1e-3
+    assert est.bandwidth("nobody") is None
+
+
+# ---------------- warehouse ticket hygiene ----------------
+
+def test_redeem_deletes_stored_object():
+    wh = DataWarehouse()
+    uid = wh.put({"x": 1})
+    cred = wh.issue_ticket(uid)
+    assert wh.redeem_ticket(cred) == {"x": 1}
+    assert uid not in wh                     # hand-off: source copy freed
+
+
+def test_revoke_and_drop_tickets():
+    wh = DataWarehouse()
+    creds = [wh.issue_ticket(wh.put(i)) for i in range(3)]
+    wh.revoke_ticket(creds[0])
+    with pytest.raises(KeyError):
+        wh.redeem_ticket(creds[0])
+    wh.drop_tickets()
+    assert not wh._tickets and not wh._meta
+
+
+# ---------------- end-to-end byte accounting ----------------
+
+def _mini_setup():
+    return make_setup(TABLE_4_1["mnist_even"], seed=0, noise=0.25,
+                      batch_size=32, het="strong")
+
+
+def test_history_byte_counters_raw_exact():
+    setup = _mini_setup()
+    h = run_fl(setup, mode="async", selector="all", epochs_per_round=5,
+               max_rounds=5, transport="raw")
+    mb = setup.model_bytes
+    # every response costs exactly model_bytes up; dispatches cost it down
+    assert h[-1].up_bytes % mb == 0 and h[-1].up_bytes >= 5 * mb
+    assert h[-1].down_bytes % mb == 0
+    assert h[-1].down_bytes >= h[-1].up_bytes     # re-dispatch >= responses
+    ups = [p.up_bytes for p in h]
+    assert ups == sorted(ups)                     # cumulative, monotone
+
+
+def test_sync_stale_response_redeemed_not_leaked():
+    """Sync mode must redeem (and free) tickets of responses it ignores."""
+    setup = _mini_setup()
+    from repro.core.events import EventLoop
+    from repro.core.selection import make_selector
+    from repro.core.server import AggregationServer
+    from repro.core.worker import FLWorker
+
+    loop = EventLoop()
+    est = TimeEstimator(server_freq=3.0, t_onebatch_server=0.05)
+    server = AggregationServer(
+        weights=setup.weights0, loop=loop, estimator=est,
+        selector=make_selector("all", est, setup.model_bytes),
+        eval_fn=setup.eval_fn, model_bytes=setup.model_bytes, mode="sync",
+        epochs_per_round=2, max_rounds=2)
+    for prof, shard in zip(setup.profiles, setup.shards):
+        server.add_worker(FLWorker(prof.worker_id, profile=prof, data=shard,
+                                   train_fn=setup.train_fn, loop=loop))
+    server.start()
+    loop.run(max_events=50_000)
+    for w in server.workers.values():
+        assert not w.warehouse._tickets, "unredeemed ticket leaked"
+        assert not w.warehouse._meta, "stored weights leaked"
+
+
+def test_uplink_bytes_ratio_at_least_10x():
+    """ISSUE acceptance: topk_ef+int8 at frac=0.1 ships >= 10x fewer
+    cumulative uplink bytes than raw per response."""
+    setup = _mini_setup()
+    hr = run_fl(setup, mode="async", selector="all", epochs_per_round=5,
+                max_rounds=6, transport="raw")
+    hc = run_fl(_mini_setup(), mode="async", selector="all",
+                epochs_per_round=5, max_rounds=6, transport="topk_ef+int8",
+                transport_frac=0.1)
+    per_resp_raw = hr[-1].up_bytes / hr[-1].version
+    per_resp_c = hc[-1].up_bytes / hc[-1].version
+    assert per_resp_raw >= 10 * per_resp_c
+    # downlink unchanged: the model still goes down in full every dispatch
+    assert hc[0].down_bytes == hr[0].down_bytes
+
+
+def test_restore_uplink_returns_ef_mass():
+    """A cancelled/discarded uplink must credit its reconstruction back
+    into the EF residual: residual_after_restore == delta + residual_before
+    (nothing is lost from the error-feedback contract)."""
+    base = _model(0)
+    for codec in ("topk_ef", "topk_ef+int8"):
+        t = transport.Transport(base, codec=codec, frac=0.1)
+        link = t.link("w0")
+        link.encode_down(base)
+        new = _model(1, scale=0.5)
+        up1 = link.encode_up(new)            # round 1 establishes residual
+        res_before = link.residual
+        delta = t.bundle.pack(_model(2, scale=0.5)) - link.tx_base
+        up2 = link.encode_up(t.bundle.unpack(delta + link.tx_base))
+        link.restore_uplink(up2)
+        assert _vec_err(link.residual, delta + res_before) < 1e-5
+
+
+def test_cancelled_transfer_after_recovery_does_not_crash():
+    """A server cancels an in-flight two-stage (top-k) transfer at round
+    close and the worker recovers (failed=False) before its _send event
+    fires: the stale send must drop silently — delivering the revoked
+    ticket would crash redeem_ticket with a KeyError."""
+    from repro.core.events import EventLoop
+    from repro.core.worker import FLWorker
+
+    base = _model(0)
+    loop = EventLoop()
+    prof = WorkerProfile("w0", bandwidth=1e6, n_batches=1)
+    w = FLWorker("w0", profile=prof,
+                 data={"x": np.zeros((4, 4)), "y": np.zeros((4,))},
+                 train_fn=lambda p, x, y, e: jax.tree.map(
+                     lambda l: l + 0.01, p), loop=loop)
+    t = transport.Transport(base, codec="topk_ef+int8", frac=0.1)
+    link = t.link("w0")
+    from repro.core.warehouse import Pointer
+    ptr = Pointer("server://a", "m")
+    w.add_server(ptr)
+    delivered = []
+    w.train_async(ptr, link.encode_down(base), 0, 1, link, delivered.append)
+    # run just past train-end so the uplink is in flight (ticket issued)...
+    loop.run(until=w.true_t_transmit(t.raw_bytes) + w.true_t_one() + 1e-9)
+    assert w._inflight, "transfer should be in flight"
+    # ...then the round closes (cancel) and the worker later recovers
+    w.profile.failed = True
+    w.cancel_inflight(ptr)
+    w.profile.failed = False
+    loop.run()                                  # fires _send: must not raise
+    assert delivered == []                      # cancelled, never delivered
+    assert not w._inflight and not w.warehouse._tickets
+    assert not w.warehouse._meta, "cancelled payload leaked"
+
+
+def test_cancel_inflight_scoped_to_one_server():
+    """cancel_inflight must revoke only the calling server's transfer,
+    leaving another server's ticket in the same warehouse intact."""
+    from repro.core.events import EventLoop
+    from repro.core.warehouse import Pointer
+    from repro.core.worker import FLWorker
+    from repro.core.estimator import WorkerProfile
+
+    w = FLWorker("w0", profile=WorkerProfile("w0"), data={"x": [], "y": []},
+                 train_fn=None, loop=EventLoop())
+    base = _model(0)
+    tA = transport.Transport(base, codec="topk_ef", frac=0.1)
+    linkA, linkB = tA.link("w0"), tA.link("w0-b")
+    linkA.encode_down(base)
+    linkB.encode_down(base)
+    upA, upB = linkA.encode_up(_model(1)), linkB.encode_up(_model(2))
+    tickA = w.warehouse.issue_ticket(w.warehouse.put(upA))
+    tickB = w.warehouse.issue_ticket(w.warehouse.put(upB))
+    ptrA, ptrB = Pointer("server://a", "m"), Pointer("server://b", "m")
+    w._inflight[ptrA] = (tickA, upA, linkA)
+    w._inflight[ptrB] = (tickB, upB, linkB)
+    w.cancel_inflight(ptrA)
+    assert not w.warehouse.has_ticket(tickA)
+    assert w.warehouse.has_ticket(tickB)        # other server untouched
+    assert w.warehouse.redeem_ticket(tickB) is upB
+
+
+def test_bandwidth_starved_t80_compressed_beats_raw():
+    """ISSUE acceptance: on a bandwidth-starved edge profile, the codec'd
+    transport reaches 80% accuracy in less simulated time than raw."""
+    def starved(codec):
+        setup = make_setup(TABLE_4_1["mnist_even"], seed=0, noise=0.2,
+                           batch_size=64, het="strong")
+        for p in setup.profiles:
+            p.bandwidth /= 2000.0
+        return run_fl(setup, mode="async", selector="time_based",
+                      aggregator="linear", epochs_per_round=10,
+                      max_rounds=900,
+                      selector_kw={"r": 10, "T0": 0.0, "A": 0.01},
+                      async_latest_table=False, async_alpha=0.9,
+                      async_stale_pow=0.25, transport=codec,
+                      target_accuracy=0.81)
+    t_raw = time_to_accuracy(starved("raw"), 0.8)
+    t_c = time_to_accuracy(starved("topk_ef+int8"), 0.8)
+    assert t_raw is not None and t_c is not None
+    assert t_c < t_raw, (t_c, t_raw)
