@@ -12,14 +12,18 @@ benchmarks/results/figures/<fig>.json.
 from __future__ import annotations
 
 import json
+import sys
 import time
 from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.configs.paper_cnn import FAST_CIFAR_CNN
 from repro.core import (TABLE_4_1, TABLE_4_2, make_setup, run_fl,
                         run_sequential_baseline, time_to_accuracy)
 
 RESULTS = Path(__file__).resolve().parent / "results" / "figures"
+BENCH_RESULTS = Path(__file__).resolve().parent / "results"
 
 REGIME = dict(noise=0.2, batch_size=64, het="extreme")
 EP = 10
@@ -176,6 +180,88 @@ def fig30_workers():
                   "improvement_pct": None if not (s and y) else 100 * (1 - y / s)})
 
 
+# --- downlink codec sweep (ROADMAP transport item, ISSUE 3) ----------------
+
+# bandwidth tiers: every profile's link divided by the tier factor — from
+# "edge but usable" to "starved" to "last-mile modem", the asymmetric
+# downlink-constrained regimes FLight and the fog-FL literature stress
+DLINK_TIERS = {"edge/200": 200.0, "starved/1000": 1000.0,
+               "modem/4000": 4000.0}
+# codec'd direction combinations: raw both ways (the thesis), PR-2-era
+# uplink-only compression, and the symmetric default
+DLINK_MODES = {
+    "raw": dict(transport="raw"),
+    "uplink_only": dict(transport="topk_ef+int8", transport_down="raw",
+                        transport_frac=0.1),
+    "symmetric": dict(transport="topk_ef+int8", transport_frac=0.1),
+}
+
+
+def fig_dlink_bandwidth_sweep(smoke: bool = False):
+    """Bytes-to-accuracy: accuracy vs cumulative wire bytes (up + down)
+    over 3 bandwidth tiers x {raw, uplink-only, symmetric} codecs.
+
+    Emits ``benchmarks/results/BENCH_dlink.json``.  ``smoke=True`` runs a
+    tiny 1-tier config (CI) that still exercises every codec combination
+    and writes the same artifact shape.
+    """
+    tiers = ({"starved/1000": 1000.0} if smoke else DLINK_TIERS)
+    max_rounds = 30 if smoke else 900
+    target = None if smoke else 0.81
+    curves, derived = {}, {}
+    for tier, div in tiers.items():
+        for mode, tkw in DLINK_MODES.items():
+            setup = make_setup(TABLE_4_1["mnist_even"], seed=0, noise=0.2,
+                               batch_size=64, het="strong")
+            for p in setup.profiles:
+                p.bandwidth /= div
+            h = run_fl(setup, mode="async", selector="time_based",
+                       aggregator="linear", epochs_per_round=EP,
+                       max_rounds=max_rounds, selector_kw=ALG2,
+                       async_latest_table=False, async_alpha=0.9,
+                       async_stale_pow=0.25, target_accuracy=target, **tkw)
+            name = f"{tier}/{mode}"
+            curves[name] = [(p.time, p.accuracy, p.up_bytes, p.down_bytes)
+                            for p in h]
+            wire80 = next((p.up_bytes + p.down_bytes for p in h
+                           if p.accuracy >= 0.8), None)
+            # steady-state downlink cost: marginal bytes/dispatch past the
+            # first-contact raw fallbacks (one per worker); None when the
+            # run is too short to have a post-warmup window
+            k = min(10, max(0, len(h) - 6))
+            dv = h[-1].version - h[k].version
+            marg = ((h[-1].down_bytes - h[k].down_bytes) / dv
+                    if k >= 10 and dv > 0 else None)
+            derived[name] = {
+                "t80": time_to_accuracy(h, 0.8),
+                "final_accuracy": h[-1].accuracy,
+                "up_bytes": h[-1].up_bytes, "down_bytes": h[-1].down_bytes,
+                "wire_bytes_to_80": wire80,
+                "down_bytes_per_dispatch_steady": marg,
+            }
+    for tier in tiers:
+        raw = derived[f"{tier}/raw"]
+        sym = derived[f"{tier}/symmetric"]
+        up_only = derived[f"{tier}/uplink_only"]
+        marg_raw = raw["down_bytes_per_dispatch_steady"]
+        marg_sym = sym["down_bytes_per_dispatch_steady"]
+        derived[f"{tier}/summary"] = {
+            "down_ratio_steady_raw_over_symmetric":
+                None if not (marg_raw and marg_sym)
+                else marg_raw / marg_sym,
+            "t80_symmetric_no_worse_than_uplink_only":
+                None if not (sym["t80"] and up_only["t80"])
+                else sym["t80"] <= up_only["t80"],
+        }
+    rec = {"config": {"tiers": {k: v for k, v in tiers.items()},
+                      "smoke": smoke, "frac": 0.1,
+                      "epochs_per_round": EP},
+           "curves": curves, "derived": derived}
+    BENCH_RESULTS.mkdir(parents=True, exist_ok=True)
+    (BENCH_RESULTS / "BENCH_dlink.json").write_text(json.dumps(rec, indent=2))
+    return {k: v for k, v in derived.items() if k.endswith("/summary")}
+
+
 ALL = {
     "fig4_1_sequential_vs_fl": fig4_1_sequential_vs_fl,
     "fig4_2_even_vs_uneven": fig4_2_even_vs_uneven,
@@ -186,4 +272,14 @@ ALL = {
     "fig4_7_alg2_async": fig4_7_alg2_async,
     "table5_1_time_to_accuracy": table5_1_time_to_accuracy,
     "fig_30workers": fig30_workers,
+    "fig_dlink_bandwidth_sweep": fig_dlink_bandwidth_sweep,
 }
+
+
+if __name__ == "__main__":
+    # CI smoke entry point: tiny downlink sweep -> BENCH_dlink.json
+    if "--smoke-dlink" in sys.argv:
+        print(json.dumps(fig_dlink_bandwidth_sweep(smoke=True), indent=2))
+    else:
+        for _name, _fn in ALL.items():
+            print(_name, json.dumps(_fn(), default=str))

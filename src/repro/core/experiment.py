@@ -138,13 +138,17 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
            async_alpha: float = 1.0, async_stale_pow: float = 0.0,
            async_min_updates: int = 1, async_delta: bool = False,
            async_latest_table: bool = True, transport: str = "raw",
+           transport_down: Optional[str] = None,
            transport_frac: float = 0.1) -> List[HistoryPoint]:
     loop = EventLoop()
     est = TimeEstimator(server_freq=server_freq,
                         t_onebatch_server=setup.per_batch_server)
     # one codec'd weight-exchange path for every transfer; the selection
-    # policies price their eq-3.4 time budget from its expected wire bytes
-    tr = Transport(setup.weights0, codec=transport, frac=transport_frac,
+    # policies price their eq-3.4 time budget from its expected wire bytes.
+    # transport_down names the downlink codec: None = symmetric (the same
+    # codec both ways), "raw" = PR-2-era uplink-only compression
+    tr = Transport(setup.weights0, codec=transport,
+                   down_codec=transport_down, frac=transport_frac,
                    raw_bytes=setup.model_bytes)
     sel = make_selector(selector, est, tr.expected_oneway_bytes,
                         **(selector_kw or {}))

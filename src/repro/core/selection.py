@@ -29,8 +29,9 @@ from .estimator import TimeEstimator, WorkerProfile
 
 # the T_transmit term of the time budget is priced per *expected wire
 # bytes*: a plain int (the thesis' full model size) or a zero-arg callable
-# (the transport layer's expected codec'd round-trip, evaluated per select
-# so compressed codecs admit slow-link workers earlier)
+# (the transport layer's expected codec'd round-trip — the mean of the
+# up- and downlink codecs' expected bytes, evaluated per select so
+# compressed codecs in either direction admit slow-link workers earlier)
 BytesSpec = Union[int, Callable[[], int]]
 
 

@@ -49,7 +49,7 @@ class AggregationServer:
                  async_alpha: float = 1.0, async_stale_pow: float = 0.0,
                  async_min_updates: int = 1, async_delta: bool = False,
                  async_latest_table: bool = True,
-                 transport="raw"):
+                 transport="raw", transport_down: Optional[str] = None):
         assert mode in ("sync", "async")
         self.address = "server://aggregator"
         self.weights = weights
@@ -90,9 +90,11 @@ class AggregationServer:
                 and os.environ.get("REPRO_AGG_PATH") != "tree"):
             self._flat = flatbuf.FlatServerState(weights)
         # single weight-exchange path: every transfer is a codec'd Payload
-        # with exact wire bytes (core/transport.py)
+        # with exact wire bytes (core/transport.py); transport_down names
+        # the downlink codec (None = symmetric with the uplink)
         if isinstance(transport, str):
             transport = transport_mod.Transport(weights, codec=transport,
+                                                down_codec=transport_down,
                                                 raw_bytes=model_bytes)
         self.transport = transport
         self.total_up_bytes = 0
@@ -160,32 +162,44 @@ class AggregationServer:
         self._round_open = True
         base_version = self.version
         rid = self._round_id
-        for wid in selected:
-            self._send_train(wid, base_version)
+        down_b = {wid: self._send_train(wid, base_version)
+                  for wid in selected}
         if self.mode == "sync":
             # straggler timeout: aggregate with whatever arrived; the round
-            # trip costs the raw model down plus the codec'd response up
-            down_b = self.transport.expected_down_bytes()
+            # trip costs the *actual* encoded dispatch down (first-contact
+            # dispatches ship the full raw model even under a compressed
+            # downlink codec) plus the codec'd response up
             up_b = self.transport.expected_up_bytes()
             t_max = max(self.est.t_one(self.workers[w].profile) *
                         self.epochs_per_round +
-                        self.est.t_transmit(self.workers[w].profile, down_b) +
+                        self.est.t_transmit(self.workers[w].profile,
+                                            down_b[w]) +
                         self.est.t_transmit(self.workers[w].profile, up_b)
                         for w in selected)
             self.loop.schedule(self.straggler_timeout_factor * max(t_max, 1e-3),
                                self._round_timeout, rid)
 
-    def _send_train(self, wid: str, base_version: int):
+    def _send_train(self, wid: str, base_version: int) -> int:
+        """Dispatch one train instruction; returns the actual downlink
+        payload bytes (what the straggler timeout must be priced on)."""
         w = self.workers.get(wid)
         if w is None:
-            return
-        if self.async_delta:
-            self._dispatch_base[wid] = self.weights
+            return 0
         link = self.transport.link(wid)
         down = link.encode_down(self.weights)
         self.total_down_bytes += down.wire_bytes
+        if self.async_delta:
+            base = self.weights
+            if not self._use_vec and self.transport.spec_down.delta:
+                # compressed downlink: the worker starts from the (lossy)
+                # reconstruction, not the exact server model — the delta-
+                # accumulate base must match it (the fast path reads the
+                # packed link.tx_base directly)
+                base = self.transport.bundle.unpack(link.tx_base)
+            self._dispatch_base[wid] = base
         w.train_async(self.pointer, down, base_version,
                       self.epochs_per_round, link, self._on_response)
+        return down.wire_bytes
 
     # --- response handling (thesis §3.3.3 steps 8-9) ---
     def _on_response(self, res: TrainResult):
@@ -222,7 +236,7 @@ class AggregationServer:
             if self._use_vec:
                 # delta-accumulate in flat-vector space: cur + (new - base);
                 # delta codecs already hold the packed base on the link
-                base_vec = (link.tx_base if self.transport.spec.delta
+                base_vec = (link.tx_base if self.transport.tracks_tx_base
                             else self._flat.bundle.pack(base))
                 weights = self._flat.delta_vec(self.weights, weights,
                                                base_vec)

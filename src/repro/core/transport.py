@@ -1,47 +1,75 @@
 """Wire-aware transport layer: codec'd flat-buffer weight exchange.
 
-Every weight transfer between the aggregation server and a worker now goes
+Every weight transfer between the aggregation server and a worker goes
 through this module.  The thesis transmits full model weights over a
 dedicated channel every round and its worker-selection/time model (eq 3.4)
 hinges on transmission time; FLight (arXiv:2308.02834) and Das et al.
 (arXiv:1911.04559) make the case that on edge links the *bytes on the wire*
 dominate FL cost — so bytes are a first-class simulated quantity here, not
-a side calculation.
+a side calculation.  Edge links are also asymmetric and often
+downlink-constrained, so the codec registry applies in BOTH directions:
+the uplink (worker -> server) response encodes a delta against the model
+the worker fetched, and the downlink (server -> worker) dispatch encodes a
+delta against the worker's **last-acked** state.
 
-A :class:`Transport` owns one codec and a :class:`Link` per worker.  The
-downlink (server -> worker) always carries the full current model (as in
-the thesis, where workers fetch the global weights each round); the uplink
-(worker -> server) response is encoded by the codec.  Codecs operate on the
-packed flat f32 buffer from ``flatbuf.ParamBundle`` — encode is one fused
-pass over a contiguous vector (the ``kernels/topk_quant`` Pallas kernel on
-TPU, its XLA oracle elsewhere), never a per-leaf tree-map — and every
-payload travels in a :class:`Payload` envelope carrying its exact
-``wire_bytes``.
+A :class:`Transport` owns one codec per direction and a :class:`Link` per
+worker.  Codecs operate on the packed flat f32 buffer from
+``flatbuf.ParamBundle`` — encode is one fused pass over a contiguous
+vector (the ``kernels/topk_quant`` Pallas kernel on TPU, its XLA oracle
+elsewhere), never a per-leaf tree-map — and every payload travels in a
+:class:`Payload` envelope carrying its exact ``wire_bytes``.
 
 Codec table (n = logical parameter count, k = max(1, int(n * frac)),
 kept = entries actually surviving the top-k threshold):
 
-  ============== ======================================== ==================
-  codec          uplink payload                           wire_bytes
-  ============== ======================================== ==================
-  raw            full weights at native dtypes            sum(leaf nbytes)
-  delta          f32 delta (new - base)                   4 * n
-  int8           int8-quantised delta + 1 f32 scale       n + 4
-  topk_ef        top-k sparsified delta w/ error feedback ceil(n/8) + 4*kept
-  topk_ef+int8   top-k + int8 on the kept values, w/ EF   ceil(n/8) + 4
-                                                            + kept
-  ============== ======================================== ==================
+  ============== ==================================== =================== ==================
+  codec          uplink payload (base = fetched       downlink payload    wire_bytes
+                 model, ``tx_base``)                  (base = last-acked
+                                                      state)
+  ============== ==================================== =================== ==================
+  raw            full weights at native dtypes        full weights        sum(leaf nbytes)
+  delta          f32 delta (new - base)               f32 delta           4 * n
+  int8           int8-quantised delta + 1 f32 scale   same, vs acked base n + 4
+  topk_ef        top-k sparsified delta w/ EF         same, vs acked base ceil(n/8) + 4*kept
+  topk_ef+int8   top-k + int8 on the kept values      same, vs acked base ceil(n/8) + 4
+                                                                            + kept
+  ============== ==================================== =================== ==================
 
 (The bitmap term ``ceil(n/8)`` is the kept-coordinate indicator; quantised
 codecs add one 4-byte per-update scale; payload values cost ``kept *
-itemsize``.)  All compressed codecs encode *deltas* from the model the
-worker fetched (the link's ``tx_base``), never raw weights, so the
-reconstruction error contracts under error feedback; the EF residual is
-per-link state, exactly one compressor memory per server<->worker channel.
+itemsize``.)  All compressed codecs encode *deltas*, never raw weights, so
+the reconstruction error contracts under error feedback.  Each direction
+keeps its own per-link EF residual — with one crucial asymmetry.  The
+uplink compresses ``delta + residual`` (the worker's base is reset by
+every dispatch, so dropped mass is gone unless explicitly carried
+forward).  The downlink compresses ``model - acked_base`` alone: because
+``acked_base`` is the worker's *actual* lossy state, that delta already
+re-carries every bit of mass past dispatches dropped — the scheme is
+self-correcting, and adding the residual on top would count the deficit
+twice per dispatch and diverge.  For the EF codecs the downlink
+``down_residual`` is the encode's *output* (``x - recon`` = the worker's
+post-fetch deficit): real error-feedback memory for accounting and
+tests, never re-added to the input; non-EF codecs (``delta``/``int8``)
+carry no residual memory in either direction, per ``CodecSpec.ef``.
 
-Decode on the server side goes straight to a packed flat vector (``base +
-dequantised delta`` fused in one pass) that lands in the server's
-persistent (W, N) row buffer — no pytree intermediate on the fast path.
+Downlink ack protocol.  A delta downlink is only decodable if the worker
+still holds the base it was encoded against, so each :class:`Link` tracks
+``acked_base`` — the last flat buffer the server *knows* the worker holds.
+The ack advances at the worker's fetch-completion event (in a real
+deployment this piggybacks on the train response; the explicit event is
+what keeps the ack correct for workers that die mid-round, after fetching
+but before responding).  A dispatch to a worker with no acked base yet
+falls back to the full raw model.  Cancelled or mid-fetch-death fetches
+must NOT advance the ack, and they roll the downlink EF residual back to
+its pre-encode value: unlike the uplink (where a cancelled response's mass
+is gone unless credited back, because the next dispatch re-bases the
+worker), the next *downlink* delta ``model - acked_base`` already contains
+everything the cancelled dispatch carried — crediting the reconstruction
+back would double-count it.
+
+Decode on either side goes straight to a packed flat vector (``base +
+dequantised delta`` fused in one pass, the ``FlatServerState``-style
+dequantise+delta-apply) — no pytree intermediate on the fast path.
 """
 from __future__ import annotations
 
@@ -99,6 +127,22 @@ def bitmap_bytes(n_params: int) -> int:
 
 def topk_k(n_params: int, frac: float) -> int:
     return max(1, int(n_params * frac))
+
+
+def expected_codec_bytes(spec: CodecSpec, n_params: int, raw_bytes: int,
+                         frac: float) -> int:
+    """Steady-state per-transfer bytes of one codec from its spec (top-k
+    codecs: assumes exactly k survivors)."""
+    if not spec.delta:
+        return raw_bytes
+    if spec.topk:
+        k = topk_k(n_params, frac)
+        itemsize = 1 if spec.quantize else 4
+        return (bitmap_bytes(n_params) + (4 if spec.quantize else 0)
+                + k * itemsize)
+    if spec.quantize:
+        return n_params + 4
+    return 4 * n_params
 
 
 # exact top-k below this many params; above it, a full-vector top_k/sort
@@ -181,81 +225,187 @@ def ef_topk_encode(x: jnp.ndarray, *, n_params: int, frac: float,
 class Link:
     """One server<->worker channel: per-link codec state.
 
-    ``tx_base`` is the packed model most recently dispatched down this link
-    (the base every delta codec encodes against and decodes onto); the
-    error-feedback ``residual`` is the compressor memory of mass dropped on
-    *this* link's past uplinks.  Both endpoints of the simulated channel
+    ``tx_base`` is the packed model the worker fetched on the most recent
+    dispatch down this link — for a raw downlink the packed server model,
+    for a compressed downlink the (lossy) reconstruction — i.e. the base
+    every *uplink* delta encodes against and decodes onto.  ``acked_base``
+    is the last flat buffer the server knows the worker holds: the base
+    every *downlink* delta encodes against (advanced only by
+    :meth:`ack_down` at fetch completion).  Each direction carries its own
+    error-feedback residual.  Both endpoints of the simulated channel
     share the object, mirroring the thesis' dedicated FTP weight channel.
     """
 
     def __init__(self, transport: "Transport"):
         self.t = transport
         self.tx_base: Optional[jnp.ndarray] = None   # packed dispatch base
-        self.residual: Optional[jnp.ndarray] = None  # EF memory (topk_ef*)
+        self.residual: Optional[jnp.ndarray] = None  # uplink EF (topk_ef*)
+        self.acked_base: Optional[jnp.ndarray] = None  # last-acked state
+        self.down_residual: Optional[jnp.ndarray] = None  # downlink EF
+        # in-flight downlink awaiting ack: (payload, residual-before-encode)
+        self._pending_down: Optional[tuple] = None
 
-    # --- downlink: server -> worker (always the full raw model) ---
+    # --- shared flat-delta codec stages ---
+    def _codec_encode(self, delta: jnp.ndarray, residual, spec: CodecSpec
+                      ) -> Tuple[Payload, object]:
+        """Encode one packed flat delta through ``spec``; returns
+        ``(payload, new_residual)``."""
+        t = self.t
+        n = t.bundle.n_params
+        if spec.topk:
+            if residual is None:
+                residual = jnp.zeros_like(delta)
+            x = delta + residual
+            data, _, resid, wire = ef_topk_encode(
+                x, n_params=n, frac=t.frac, quantize=spec.quantize,
+                use_pallas=t.use_pallas, interpret=t.interpret)
+            return Payload(spec.name, wire, data), \
+                (resid if spec.ef else residual)
+        if spec.quantize:                        # int8: whole delta
+            scale = _int8_scale(delta)
+            q, _ = topk_quant.topk_quant_encode(
+                delta, 0.0, scale, use_pallas=t.use_pallas,
+                interpret=t.interpret)
+            return Payload(spec.name, n + 4, (q, scale)), residual
+        return Payload(spec.name, 4 * n, delta), residual  # dense f32
+
+    def _codec_apply(self, data, spec: CodecSpec,
+                     base: jnp.ndarray) -> jnp.ndarray:
+        """``base + recon(delta)`` — the fused dequantise+delta-apply."""
+        if spec.quantize:
+            q, scale = data
+            # fused dequantise + delta-apply: one pass, no f32 intermediate
+            return topk_quant.dequant_add(q, scale, base,
+                                          use_pallas=self.t.use_pallas,
+                                          interpret=self.t.interpret)
+        return base + data
+
+    # --- downlink: server -> worker ---
+    @property
+    def needs_down_ack(self) -> bool:
+        """True when the downlink codec is stateful (delta vs acked base),
+        so fetch completion must be signalled explicitly."""
+        return self.t.spec_down.delta
+
     def encode_down(self, weights_tree) -> Payload:
-        if self.t.spec.delta:
-            # remember the packed base so the uplink delta decodes exactly
-            self.tx_base = self.t._pack_down(weights_tree)
-        return Payload("raw", self.t.raw_bytes, weights_tree)
+        t = self.t
+        sd = t.spec_down
+        if not sd.delta:
+            if t.spec_up.delta:
+                # remember the packed base so the uplink delta decodes
+                self.tx_base = t._pack_down(weights_tree)
+            return Payload("raw", t.raw_bytes, weights_tree)
+        vec = t._pack_down(weights_tree)
+        if self.acked_base is None:
+            # first dispatch: the worker holds no base yet -> raw fallback
+            self.tx_base = vec
+            payload = Payload("raw", t.raw_bytes, weights_tree)
+            self._pending_down = (payload, self.down_residual)
+            return payload
+        # the delta vs the worker's ACTUAL (acked) state is already the
+        # error-feedback-corrected quantity: it re-carries every bit of
+        # mass past dispatches dropped, so nothing is added on top — an
+        # explicit residual term here would count that deficit twice per
+        # dispatch and diverge.  For EF codecs _codec_encode still emits
+        # the residual OUTPUT (x - recon = the worker's post-fetch
+        # deficit), the genuine per-link downlink EF memory.
+        delta = vec - self.acked_base
+        res_before = self.down_residual
+        payload, self.down_residual = self._codec_encode(delta, None, sd)
+        # the worker-visible model after this fetch (== what decode_down
+        # produces, same fused op on the same inputs): the uplink base
+        self.tx_base = self._codec_apply(payload.data, sd, self.acked_base)
+        self._pending_down = (payload, res_before)
+        return payload
+
+    def decode_down_vec(self, payload: Payload) -> jnp.ndarray:
+        """Payload -> packed flat f32 vector of the dispatched model,
+        reconstructed against the link's acked base."""
+        if payload.codec == "raw":
+            return self.t._pack_down(payload.data)
+        return self._codec_apply(payload.data, self.t.spec_down,
+                                 self.acked_base)
 
     def decode_down(self, payload: Payload):
-        return payload.data
+        """Payload -> weight pytree (no ack bookkeeping — raw downlinks
+        and reference paths)."""
+        if payload.codec == "raw":
+            return payload.data
+        return self.t.bundle.unpack(self.decode_down_vec(payload))
+
+    def ack_down(self, payload: Payload, vec: jnp.ndarray) -> None:
+        """Advance the last-acked state to ``vec`` (the decoded model) —
+        the fetch-complete event.  Only the payload that is actually
+        pending may ack: a stale or already-cancelled fetch must not
+        advance the ack (a raw payload with nothing pending is allowed —
+        re-acking a full model the worker genuinely received is exact)."""
+        if self._pending_down is not None:
+            if self._pending_down[0] is not payload:
+                return               # stale fetch: not the pending dispatch
+        elif payload.codec != "raw":
+            return                   # delta payload already acked/cancelled
+        self.acked_base = vec
+        self._pending_down = None
+
+    def complete_fetch(self, payload: Payload):
+        """Worker-side fetch completion: decode against the local acked
+        base, advance the ack, return the weight pytree to train from.
+
+        For the pending dispatch the reconstruction was already computed
+        at encode time (``tx_base`` — the same fused op on the same
+        inputs), so the shared simulated channel reuses it instead of
+        re-running the kernel; :meth:`decode_down_vec` remains the
+        wire-honest path, bit-parity-asserted in the transport tests."""
+        pending = (self._pending_down is not None
+                   and self._pending_down[0] is payload)
+        vec = self.tx_base if pending else self.decode_down_vec(payload)
+        self.ack_down(payload, vec)
+        if payload.codec == "raw":
+            return payload.data
+        return self.t.bundle.unpack(vec)
+
+    def restore_downlink(self, payload: Payload) -> None:
+        """Roll back a never-delivered downlink (cancelled fetch or death
+        mid-fetch): the ack has not advanced, so the next dispatch's delta
+        ``model - acked_base`` already re-carries this payload's mass —
+        the EF residual must revert to its pre-encode value (crediting the
+        reconstruction back, as the uplink does, would double-count)."""
+        if self._pending_down is None or self._pending_down[0] is not payload:
+            return
+        _, res_before = self._pending_down
+        self._pending_down = None
+        self.down_residual = res_before
 
     # --- uplink: worker -> server (codec'd response) ---
     def upfront_up_bytes(self) -> Optional[int]:
         """Exact uplink cost known before training, or None when the size is
         data-dependent (top-k codecs: ``kept`` varies with threshold ties)."""
-        spec = self.t.spec
+        spec = self.t.spec_up
         if spec.topk:
             return None
         return self.t.expected_up_bytes()
 
     def encode_up(self, new_tree) -> Payload:
-        spec = self.t.spec
+        spec = self.t.spec_up
         if not spec.delta:                       # raw: ship the tree as-is
             return Payload(spec.name, self.t.raw_bytes, new_tree)
-        bundle = self.t.bundle
-        vec = bundle.pack(new_tree)
-        delta = vec - self.tx_base
-        n = bundle.n_params
-        if spec.topk:
-            if self.residual is None:
-                self.residual = jnp.zeros_like(delta)
-            x = delta + self.residual
-            data, _, resid, wire = ef_topk_encode(
-                x, n_params=n, frac=self.t.frac, quantize=spec.quantize,
-                use_pallas=self.t.use_pallas, interpret=self.t.interpret)
-            if spec.ef:
-                self.residual = resid
-            return Payload(spec.name, wire, data)
-        if spec.quantize:                        # int8: whole delta
-            scale = _int8_scale(delta)
-            q, _ = topk_quant.topk_quant_encode(
-                delta, 0.0, scale, use_pallas=self.t.use_pallas,
-                interpret=self.t.interpret)
-            return Payload(spec.name, n + 4, (q, scale))
-        return Payload(spec.name, 4 * n, delta)  # delta: dense f32
+        vec = self.t.bundle.pack(new_tree)
+        payload, self.residual = self._codec_encode(
+            vec - self.tx_base, self.residual, spec)
+        return payload
 
     def decode_up_vec(self, payload: Payload) -> jnp.ndarray:
         """Payload -> packed flat f32 vector of the worker's new absolute
         weights (lands directly in the server's (W, N) row buffer)."""
-        spec = self.t.spec
+        spec = self.t.spec_up
         if not spec.delta:
             return self.t.bundle.pack(payload.data)
-        if spec.quantize:
-            q, scale = payload.data
-            # fused dequantise + delta-apply: one pass, no f32 intermediate
-            return topk_quant.dequant_add(q, scale, self.tx_base,
-                                          use_pallas=self.t.use_pallas,
-                                          interpret=self.t.interpret)
-        return self.tx_base + payload.data
+        return self._codec_apply(payload.data, spec, self.tx_base)
 
     def decode_up_tree(self, payload: Payload):
         """Payload -> pytree (the per-leaf reference path, kept for
         ``REPRO_AGG_PATH=tree`` parity and non-packable weight trees)."""
-        if not self.t.spec.delta:
+        if not self.t.spec_up.delta:
             return payload.data
         return self.t.bundle.unpack(self.decode_up_vec(payload))
 
@@ -264,38 +414,49 @@ class Link:
         encode debits the residual assuming delivery, so a transfer that is
         cancelled mid-transmit or discarded by the receiver (sync staleness)
         must put its reconstruction back, or that top-k mass is silently
-        lost from both the model and the error-feedback memory."""
-        if not self.t.spec.ef or self.residual is None:
+        lost from both the model and the error-feedback memory.  (The next
+        dispatch re-bases the worker, so — unlike a cancelled downlink —
+        nothing else re-carries this mass.)"""
+        if not self.t.spec_up.ef or self.residual is None:
             return
         data = payload.data
-        recon = _dequant(*data) if self.t.spec.quantize else data
+        recon = _dequant(*data) if self.t.spec_up.quantize else data
         self.residual = self.residual + recon
 
 
 class Transport:
     """Codec registry instance + per-worker links for one server.
 
-    ``raw_bytes`` defaults to the template's native byte size; pass the
-    server's ``model_bytes`` to pin it (required for non-packable weight
-    trees, where only the ``raw`` codec applies).
+    ``codec`` names the uplink codec; ``down_codec`` the downlink one
+    (``None`` = symmetric, i.e. the same codec both ways; pass ``"raw"``
+    for the PR-2-era uplink-only compression).  ``raw_bytes`` defaults to
+    the template's native byte size; pass the server's ``model_bytes`` to
+    pin it (required for non-packable weight trees, where only the ``raw``
+    codec applies).
     """
 
-    def __init__(self, template, codec: str = "raw", *, frac: float = 0.1,
+    def __init__(self, template, codec: str = "raw", *,
+                 down_codec: Optional[str] = None, frac: float = 0.1,
                  raw_bytes: Optional[int] = None, use_pallas=None,
                  interpret=None):
-        if codec not in CODECS:
-            raise ValueError(f"unknown codec {codec!r}; "
-                             f"have {sorted(CODECS)}")
-        self.spec = CODECS[codec]
+        if down_codec is None:
+            down_codec = codec
+        for c in (codec, down_codec):
+            if c not in CODECS:
+                raise ValueError(f"unknown codec {c!r}; "
+                                 f"have {sorted(CODECS)}")
+        self.spec_up = CODECS[codec]
+        self.spec_down = CODECS[down_codec]
         self.frac = float(frac)
         self.use_pallas = use_pallas
         self.interpret = interpret
         self.bundle = (flatbuf.bundle_for(template)
                        if flatbuf.packable(template) else None)
-        if self.bundle is None and self.spec.name != "raw":
+        if self.bundle is None and (self.spec_up.delta or
+                                    self.spec_down.delta):
             raise ValueError(
-                f"codec {codec!r} needs a packable weight tree; only 'raw' "
-                "works with non-array leaves")
+                f"codec {codec!r}/{down_codec!r} needs a packable weight "
+                "tree; only 'raw' works with non-array leaves")
         if raw_bytes is not None:
             self.raw_bytes = int(raw_bytes)
         elif self.bundle is not None:
@@ -317,11 +478,22 @@ class Transport:
 
     @property
     def codec(self) -> str:
-        return self.spec.name
+        return self.spec_up.name
+
+    @property
+    def down_codec(self) -> str:
+        return self.spec_down.name
 
     @property
     def flat_capable(self) -> bool:
         return self.bundle is not None
+
+    @property
+    def tracks_tx_base(self) -> bool:
+        """True when links carry a packed dispatch base (either direction
+        is a delta codec) — i.e. ``link.tx_base`` is the worker's fetched
+        model in flat-vector form."""
+        return self.spec_up.delta or self.spec_down.delta
 
     def link(self, worker_id: str) -> Link:
         l = self._links.get(worker_id)
@@ -331,26 +503,24 @@ class Transport:
 
     # --- expected costs (selection time budgets / straggler timeouts) ---
     def expected_down_bytes(self) -> int:
-        return self.raw_bytes
+        """Per-dispatch downlink estimate from the down codec spec (the
+        steady state: first-contact dispatches cost ``raw_bytes``)."""
+        if self.bundle is None:
+            return self.raw_bytes
+        return expected_codec_bytes(self.spec_down, self.bundle.n_params,
+                                    self.raw_bytes, self.frac)
 
     def expected_up_bytes(self) -> int:
         """Per-response uplink estimate from the codec spec (top-k codecs:
         assumes exactly k survivors)."""
-        spec = self.spec
-        if not spec.delta:
+        if self.bundle is None:
             return self.raw_bytes
-        n = self.bundle.n_params
-        if spec.topk:
-            k = topk_k(n, self.frac)
-            itemsize = 1 if spec.quantize else 4
-            return (bitmap_bytes(n) + (4 if spec.quantize else 0)
-                    + k * itemsize)
-        if spec.quantize:
-            return n + 4
-        return 4 * n
+        return expected_codec_bytes(self.spec_up, self.bundle.n_params,
+                                    self.raw_bytes, self.frac)
 
     def expected_oneway_bytes(self) -> int:
         """Mean per-direction bytes of a round trip — the figure the
         selection policies plug into the eq-3.4 time budget (for ``raw``
-        this is exactly the model's byte size, matching the thesis)."""
+        both ways this is exactly the model's byte size, matching the
+        thesis)."""
         return (self.expected_down_bytes() + self.expected_up_bytes()) // 2

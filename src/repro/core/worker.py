@@ -48,6 +48,10 @@ class FLWorker:
         # issue until delivery — lets a server cancel exactly its own
         # transfer (round closed) without touching other servers' tickets
         self._inflight: Dict[Pointer, tuple] = {}
+        # in-flight downlink fetch per server: (payload, link) from dispatch
+        # until the fetch-complete event — a round close mid-fetch cancels
+        # it, and the link's ack/downlink-EF state must not advance
+        self._fetching: Dict[Pointer, tuple] = {}
         self.busy = False
         # ground-truth speed (may differ from the estimator's eq-3.4 guess)
         self._per_batch_time = per_batch_time if per_batch_time is not None \
@@ -61,9 +65,17 @@ class FLWorker:
         return server_pointer in self.server_pointers
 
     def cancel_inflight(self, server_pointer: Pointer) -> None:
-        """Cancel this server's in-flight uplink (its round closed): revoke
-        the one-time credential, delete the stored payload, and credit the
-        encoded mass back into the link's error-feedback residual."""
+        """Cancel this server's in-flight transfers (its round closed).
+        An unfinished *fetch* is dropped without advancing the downlink
+        ack (the next dispatch's delta re-carries its mass, so the down
+        EF residual reverts); an in-transit *uplink* has its one-time
+        credential revoked, the stored payload deleted, and the encoded
+        mass credited back into the link's error-feedback residual."""
+        fetch = self._fetching.pop(server_pointer, None)
+        if fetch is not None:
+            down, link = fetch
+            link.restore_downlink(down)
+            self.busy = False
         entry = self._inflight.pop(server_pointer, None)
         if entry is not None:
             ticket, up, link = entry
@@ -86,16 +98,56 @@ class FLWorker:
         respond (T_transmit over the actual encoded uplink payload bytes).
         ``on_done`` fires on the event loop at the right time.
 
-        For codecs whose uplink size is known before training (raw, delta,
-        int8) the whole chain is one scheduled event; top-k codecs must
-        train first to know how many coordinates survive the threshold, so
-        they schedule the respond leg separately after encoding."""
+        Stateful (delta) downlink codecs schedule an explicit
+        fetch-complete event: the worker decodes against its last-acked
+        base and advances the ack exactly then, so a fetch that is
+        cancelled (round closed) or dies mid-flight never advances the
+        link state.  For codecs whose uplink size is known before training
+        (raw, delta, int8) the rest of the chain is one scheduled event;
+        top-k codecs must train first to know how many coordinates survive
+        the threshold, so they schedule the respond leg separately after
+        encoding."""
         if not self.accepts(server_pointer) or self.profile.failed:
+            # a dispatch that never lands: un-debit the downlink EF state
+            link.restore_downlink(down)
             return  # silently drop: a failed/foreign request never responds
         self.busy = True
         t_fetch = self.true_t_transmit(down.wire_bytes)
-        t_train = self.true_t_one() * epochs
+        if link.needs_down_ack:
+            # stateful downlink: decode + ack at the fetch-complete event
+            self._fetching[server_pointer] = (down, link)
+            self.loop.schedule(t_fetch, self._fetch_done, server_pointer,
+                               down, base_version, epochs, link, on_done)
+            return
         weights = link.decode_down(down)
+        self._after_fetch(server_pointer, weights, base_version, epochs,
+                          link, on_done, t_fetch)
+
+    def _fetch_done(self, server_pointer: Pointer, down: Payload,
+                    base_version: int, epochs: int, link: Link, on_done):
+        entry = self._fetching.get(server_pointer)
+        if entry is None or entry[0] is not down:
+            # this fetch was cancelled (round closed; ack untouched, down
+            # EF reverted). A newer dispatch may already own the slot.
+            return
+        self._fetching.pop(server_pointer)
+        if self.profile.failed:          # died mid-fetch: never received
+            link.restore_downlink(down)
+            self.busy = False
+            return
+        # the explicit fetch-complete event: decode against the local
+        # acked base and advance the ack — even if this worker now dies
+        # mid-round, the server knows which base it holds
+        weights = link.complete_fetch(down)
+        self._after_fetch(server_pointer, weights, base_version, epochs,
+                          link, on_done, 0.0)
+
+    def _after_fetch(self, server_pointer: Pointer, weights,
+                     base_version: int, epochs: int, link: Link, on_done,
+                     t_fetch: float):
+        """Train + respond, scheduled ``t_fetch`` from now (0.0 when called
+        from the fetch-complete event itself)."""
+        t_train = self.true_t_one() * epochs
 
         def _train():
             if len(self.data["x"]):

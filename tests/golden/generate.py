@@ -1,0 +1,68 @@
+"""Regenerate the golden HistoryPoint fixtures for the transport
+regression suite (tests/test_golden_histories.py).
+
+Run from the repo root:
+
+    PYTHONPATH=src python tests/golden/generate.py
+
+The fixtures pin the exact histories of the PR-2 transport behaviors that
+the downlink refactor must not change: ``transport="raw"`` and the
+uplink-only compressed configs, across sync / async / async_delta /
+time_based.  Floats are stored as ``float.hex()`` so the comparison is
+bit-exact, not round-trip-through-decimal.
+"""
+import json
+import sys
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+sys.path.insert(0, str(HERE.parents[1] / "src"))
+
+from repro.core import TABLE_4_1, make_setup, run_fl  # noqa: E402
+
+# one small-but-nontrivial regime: heterogeneous profiles so sync and
+# time_based schedules actually differ, few enough rounds to stay fast
+SETUP_KW = dict(seed=0, noise=0.25, batch_size=32, het="strong")
+EP, ROUNDS = 3, 4
+
+MODES = {
+    "sync": dict(mode="sync", selector="all"),
+    "async": dict(mode="async", selector="all", async_alpha=0.9,
+                  async_latest_table=False, aggregator="linear"),
+    "async_delta": dict(mode="async", selector="all", async_delta=True),
+    "time_based": dict(mode="sync", selector="time_based",
+                       selector_kw={"r": EP, "T0": 0.0, "A": 0.01}),
+}
+
+TRANSPORTS = {
+    "raw": dict(transport="raw"),
+    # PR-2 behavior: compressed uplink, raw downlink.  Before the downlink
+    # refactor ``transport=`` alone meant exactly this; the regenerated
+    # fixtures are produced by the uplink-only spelling of the same config.
+    "uplink_only": dict(transport="topk_ef+int8", transport_frac=0.1),
+}
+
+
+def history_record(h):
+    return [{"time": p.time.hex(), "version": p.version,
+             "accuracy": float(p.accuracy).hex(), "n_updates": p.n_updates,
+             "selected": p.selected, "up_bytes": p.up_bytes,
+             "down_bytes": p.down_bytes} for p in h]
+
+
+def main():
+    out = {}
+    for tname, tkw in TRANSPORTS.items():
+        for mname, mkw in MODES.items():
+            setup = make_setup(TABLE_4_1["mnist_even"], **SETUP_KW)
+            h = run_fl(setup, epochs_per_round=EP, max_rounds=ROUNDS,
+                       **mkw, **tkw)
+            out[f"{tname}/{mname}"] = history_record(h)
+            print(f"{tname}/{mname}: {len(h)} points, "
+                  f"final acc {h[-1].accuracy:.4f}")
+    (HERE / "histories.json").write_text(json.dumps(out, indent=1))
+    print(f"wrote {HERE / 'histories.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Golden-history regression: the downlink-codec refactor must not change
+a single bit of the PR-2 transport behaviors.
+
+``tests/golden/histories.json`` pins the exact ``HistoryPoint`` sequences
+(floats stored as ``float.hex()``) produced by the pre-downlink transport
+for ``transport="raw"`` and the uplink-only compressed config, across
+sync / async / async_delta / time_based.  Regenerate (only when a change
+is *intended* to shift them) with::
+
+    PYTHONPATH=src python tests/golden/generate.py
+"""
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.core import TABLE_4_1, make_setup, run_fl
+
+_GOLDEN_DIR = Path(__file__).resolve().parent / "golden"
+GOLDEN = _GOLDEN_DIR / "histories.json"
+
+# the generator owns the pinned configs; load it by path (tests/ is not a
+# package under the tier-1 pytest invocation)
+_spec = importlib.util.spec_from_file_location("golden_generate",
+                                               _GOLDEN_DIR / "generate.py")
+_gen = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(_gen)
+MODES, SETUP_KW = _gen.MODES, _gen.SETUP_KW
+EP, ROUNDS, history_record = _gen.EP, _gen.ROUNDS, _gen.history_record
+
+# the PR-3 spellings of the pinned PR-2 configs: transport_down="raw"
+# reproduces the era when only the uplink was codec'd
+TRANSPORTS = {
+    "raw": dict(transport="raw"),
+    "uplink_only": dict(transport="topk_ef+int8", transport_down="raw",
+                        transport_frac=0.1),
+}
+
+CASES = [(t, m) for t in TRANSPORTS for m in MODES]
+
+
+@pytest.mark.parametrize("tname,mname", CASES,
+                         ids=[f"{t}-{m}" for t, m in CASES])
+def test_history_bit_identical_to_pr2(tname, mname):
+    golden = json.loads(GOLDEN.read_text())[f"{tname}/{mname}"]
+    setup = make_setup(TABLE_4_1["mnist_even"], **SETUP_KW)
+    h = run_fl(setup, epochs_per_round=EP, max_rounds=ROUNDS,
+               **MODES[mname], **TRANSPORTS[tname])
+    assert history_record(h) == golden

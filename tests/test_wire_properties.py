@@ -1,0 +1,159 @@
+"""Property tests for the transport wire contract (hypothesis-based).
+
+For every codec x direction over arbitrary leaf shapes and top-k
+fractions: ``decode(encode(x))`` plus the error-feedback residual
+conserves the update's mass, and ``Payload.wire_bytes`` exactly matches
+the CodecSpec byte formula (bitmap + scales + payload itemsize).
+
+Guarded with ``pytest.importorskip``: ``hypothesis`` is a dev-only extra
+(see requirements-dev.txt) and the tier-1 suite must run without it.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st   # noqa: E402
+
+from repro.core import transport                           # noqa: E402
+
+CODECS = ["raw", "delta", "int8", "topk_ef", "topk_ef+int8"]
+
+# arbitrary ragged models: 1-3 leaves, each 1-D/2-D with dims in [1, 24]
+shapes_st = st.lists(
+    st.lists(st.integers(1, 24), min_size=1, max_size=2).map(tuple),
+    min_size=1, max_size=3)
+frac_st = st.floats(0.05, 0.9)
+
+
+def _tree(shapes, seed, scale=1.0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(shapes))
+    return {f"l{i}": jax.random.normal(k, s) * scale
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+def _expected_wire(spec, x, n, frac, raw_bytes):
+    """The codec table's byte formula, recomputed from first principles
+    on the exact pre-encode vector ``x`` (= delta + EF residual)."""
+    if not spec.delta:
+        return raw_bytes
+    if spec.topk:
+        thresh = transport.topk_threshold(x, transport.topk_k(n, frac), n)
+        kept = int(jnp.sum(jnp.abs(x) >= thresh))
+        if spec.quantize:
+            return transport.bitmap_bytes(n) + 4 + kept
+        return transport.bitmap_bytes(n) + 4 * kept
+    if spec.quantize:
+        return n + 4
+    return 4 * n
+
+
+def _mass_check(recon_delta, residual, x, spec):
+    """decode(encode(x)) + residual conserves x's mass: exact for EF and
+    lossless codecs, bounded by the quantisation step for plain int8."""
+    if spec.ef or not spec.quantize:
+        resid = residual if spec.ef else 0.0
+        err = float(jnp.max(jnp.abs(recon_delta + resid - x)))
+        assert err < 1e-4
+    else:                                   # int8: no residual memory
+        scale = float(transport._int8_scale(x))
+        assert float(jnp.max(jnp.abs(recon_delta - x))) <= scale * 0.51
+
+
+@pytest.mark.parametrize("codec", CODECS)
+@given(shapes=shapes_st, frac=frac_st, seed=st.integers(0, 2**16))
+@settings(deadline=None, max_examples=15)
+def test_uplink_wire_contract(codec, shapes, frac, seed):
+    base = _tree(shapes, seed)
+    new = _tree(shapes, seed + 1, scale=0.5)
+    t = transport.Transport(base, codec=codec, down_codec="raw", frac=frac)
+    spec = transport.CODECS[codec]
+    link = t.link("w0")
+    link.encode_down(base)
+    n = t.bundle.n_params
+    # round 2 as well: the EF residual feeds back into both the byte
+    # formula (threshold over delta + residual) and the mass invariant
+    for rnd in range(2):
+        cur = _tree(shapes, seed + 1 + rnd, scale=0.5)
+        delta = (t.bundle.pack(cur) - link.tx_base if spec.delta else None)
+        x = delta if delta is None or link.residual is None \
+            else delta + link.residual
+        up = link.encode_up(cur)
+        assert up.wire_bytes == _expected_wire(spec, x, n, frac,
+                                               t.raw_bytes)
+        got = link.decode_up_vec(up)
+        if not spec.delta:
+            assert jnp.array_equal(got, t.bundle.pack(cur))
+        else:
+            _mass_check(got - link.tx_base, link.residual, x, spec)
+
+
+@pytest.mark.parametrize("codec", CODECS)
+@given(shapes=shapes_st, frac=frac_st, seed=st.integers(0, 2**16))
+@settings(deadline=None, max_examples=15)
+def test_downlink_wire_contract(codec, shapes, frac, seed):
+    base = _tree(shapes, seed)
+    t = transport.Transport(base, codec="raw", down_codec=codec, frac=frac)
+    spec = transport.CODECS[codec]
+    link = t.link("w0")
+    d0 = link.encode_down(base)
+    # first dispatch: raw fallback, exact model bytes, ack at fetch
+    assert d0.codec == "raw" and d0.wire_bytes == t.raw_bytes
+    link.complete_fetch(d0)
+    if not spec.delta:
+        return
+    n = t.bundle.n_params
+    for rnd in range(2):
+        cur = _tree(shapes, seed + 2 + rnd, scale=0.5)
+        # the encode input is the delta vs the worker's actual acked
+        # state ALONE: it already re-carries all previously dropped mass
+        # (self-correcting — re-adding the residual would double-count)
+        x = t.bundle.pack(cur) - link.acked_base
+        d = link.encode_down(cur)
+        assert d.codec == codec
+        assert d.wire_bytes == _expected_wire(spec, x, n, frac, t.raw_bytes)
+        acked_before = link.acked_base
+        link.complete_fetch(d)
+        _mass_check(link.acked_base - acked_before, link.down_residual,
+                    x, spec)
+        # the worker-side reconstruction is the server's uplink base
+        assert jnp.array_equal(link.acked_base, link.tx_base)
+
+
+@given(shapes=shapes_st, seed=st.integers(0, 2**16))
+@settings(deadline=None, max_examples=10)
+def test_raw_wire_bytes_equal_native_leaf_bytes(shapes, seed):
+    tree = _tree(shapes, seed)
+    t = transport.Transport(tree, codec="raw")
+    want = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+    assert t.raw_bytes == want
+    link = t.link("w0")
+    assert link.encode_down(tree).wire_bytes == want
+    assert link.encode_up(tree).wire_bytes == want
+
+
+@given(shapes=shapes_st, frac=frac_st, seed=st.integers(0, 2**16))
+@settings(deadline=None, max_examples=10)
+def test_cancelled_downlink_conserves_future_mass(shapes, frac, seed):
+    """Encode -> cancel -> re-encode must deliver exactly what a single
+    encode of the final state would: the revert-don't-credit restore rule
+    keeps the EF telescoping sum intact."""
+    base = _tree(shapes, seed)
+    t = transport.Transport(base, codec="raw", down_codec="topk_ef+int8",
+                            frac=frac)
+    link = t.link("w0")
+    link.complete_fetch(link.encode_down(base))
+    m1 = _tree(shapes, seed + 1, scale=0.5)
+    link.complete_fetch(link.encode_down(m1))    # establish EF residual
+    res = link.down_residual
+    acked = link.acked_base
+    m2 = _tree(shapes, seed + 2, scale=0.5)
+    link.restore_downlink(link.encode_down(m2))  # cancelled fetch
+    assert link.acked_base is acked
+    assert jnp.array_equal(link.down_residual, res)
+    d = link.encode_down(m2)                     # re-dispatch, delivered
+    link.complete_fetch(d)
+    x = t.bundle.pack(m2) - acked
+    err = float(jnp.max(jnp.abs(
+        (link.acked_base - acked) + link.down_residual - x)))
+    assert err < 1e-4
