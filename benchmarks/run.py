@@ -10,9 +10,12 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 
 def main() -> None:
-    from benchmarks import agg_bench, fl_figures, roofline, wire_bench
+    from benchmarks import agg_bench, agg_shard_bench, fl_figures, \
+        roofline, wire_bench
 
     agg_bench.main()
+    print()
+    agg_shard_bench.main()
     print()
     wire_bench.main()
     print()

@@ -15,6 +15,7 @@ import numpy as np
 from repro.configs.paper_cnn import CNNConfig, FAST_MNIST_CNN, MNIST_CNN
 from repro.data.synth import federated_split, make_classification_dataset
 from repro.models import cnn
+from repro.parallel import sharding as psharding
 
 from .estimator import TimeEstimator, WorkerProfile
 from .events import EventLoop
@@ -139,17 +140,34 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
            async_min_updates: int = 1, async_delta: bool = False,
            async_latest_table: bool = True, transport: str = "raw",
            transport_down: Optional[str] = None,
-           transport_frac: float = 0.1) -> List[HistoryPoint]:
+           transport_frac: float = 0.1,
+           server_mesh: Optional[int] = None) -> List[HistoryPoint]:
+    """One end-to-end FL run; returns the server's HistoryPoint sequence.
+
+    ``mode``/``selector``/``aggregator`` pick the thesis §2-3 machinery;
+    ``transport``/``transport_down``/``transport_frac`` the wire codecs
+    (see ``core.transport``).  ``server_mesh`` shards the aggregation
+    substrate over that many devices (a 1-D ``agg`` mesh via
+    ``parallel.sharding.agg_mesh``): the packed server model, the (W, N)
+    update-row buffer and every link's flat vectors split along the
+    parameter axis, and the fused merge runs per shard — per-device live
+    bytes shrink ~linearly with mesh size.  ``server_mesh=1`` is
+    bit-identical to the default fused single-device path (``None``);
+    larger meshes match within the reduction-order LSB tolerance
+    documented in ROADMAP.md (CPU runs need
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    """
     loop = EventLoop()
     est = TimeEstimator(server_freq=server_freq,
                         t_onebatch_server=setup.per_batch_server)
+    mesh = None if server_mesh is None else psharding.agg_mesh(server_mesh)
     # one codec'd weight-exchange path for every transfer; the selection
     # policies price their eq-3.4 time budget from its expected wire bytes.
     # transport_down names the downlink codec: None = symmetric (the same
     # codec both ways), "raw" = PR-2-era uplink-only compression
     tr = Transport(setup.weights0, codec=transport,
                    down_codec=transport_down, frac=transport_frac,
-                   raw_bytes=setup.model_bytes)
+                   raw_bytes=setup.model_bytes, mesh=mesh)
     sel = make_selector(selector, est, tr.expected_oneway_bytes,
                         **(selector_kw or {}))
     server = AggregationServer(
@@ -159,7 +177,7 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
         max_rounds=max_rounds, target_accuracy=target_accuracy,
         async_alpha=async_alpha, async_stale_pow=async_stale_pow,
         async_min_updates=async_min_updates, async_delta=async_delta,
-        async_latest_table=async_latest_table, transport=tr)
+        async_latest_table=async_latest_table, transport=tr, mesh=mesh)
     for prof, shard in zip(setup.profiles, setup.shards):
         w = FLWorker(prof.worker_id, profile=prof, data=shard,
                      train_fn=setup.train_fn, loop=loop,

@@ -21,9 +21,24 @@ and keeps every per-round structure persistent:
 Buffers are padded to a multiple of ``BLOCK`` lanes so the kernel grid
 divides evenly and the padded tail (zeros in both server and updates)
 stays zero through every merge.
+
+Sharded substrate: pass ``mesh=`` (a 1-D ``parallel.sharding.agg_mesh``)
+and the whole flat layer shards along the packed parameter axis N —
+``ParamBundle`` pads N to ``BLOCK * n_shards`` divisibility and carries a
+``NamedSharding`` (vectors ``P('agg')``, the (W, N) row buffer
+``P(None, 'agg')``), pack/unpack jits pin their outputs to it, and the
+fused merge dispatches per shard (``shard_map``-ed Pallas kernel on TPU,
+a GSPMD-partitioned XLA contraction elsewhere).  The packed layout keeps
+every worker's lane of a parameter on one device, so the W-reduce is
+shard-local, the merge needs no collective at all, and no host ever
+materialises the full (W, N) buffer — per-device live bytes shrink
+linearly with mesh size.  A 1-device mesh is bit-identical to the
+unsharded path (pinned by tests/test_golden_histories.py +
+tests/test_agg_sharded.py).
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -31,8 +46,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import fedavg_agg, pallas_flags
+from repro.parallel import sharding as psharding
 
 BLOCK = 512          # kernel tile width; pack pads N up to a multiple
+
+
+def padded_size_for(n_params: int, n_shards: int = 1) -> int:
+    """Packed width of an ``n_params`` model on an ``n_shards`` server
+    mesh: a multiple of ``BLOCK * n_shards`` so the buffer splits evenly
+    and every device's slice stays BLOCK-aligned for the kernel grid."""
+    lane = BLOCK * max(1, int(n_shards))
+    return -(-int(n_params) // lane) * lane
+
+
+def shard_spans(lo: int, hi: int, shard_size: int) -> Tuple[tuple, ...]:
+    """Mesh-aware offsets: split the global param range ``[lo, hi)`` into
+    shard-local slices, one ``(shard, local_lo, local_hi, global_lo)``
+    tuple per device the range touches (a leaf crossing a shard boundary
+    owns one span per device)."""
+    spans = []
+    d = lo // shard_size
+    while lo < hi:
+        end = min(hi, (d + 1) * shard_size)
+        spans.append((d, lo - d * shard_size, end - d * shard_size, lo))
+        lo, d = end, d + 1
+    return tuple(spans)
 
 
 def packable(tree) -> bool:
@@ -48,9 +86,19 @@ class ParamBundle:
     Offsets, shapes and dtypes are computed once at construction; the jitted
     pack/unpack close over them as static data, so every later call with the
     same structure is a cache hit.
+
+    With ``mesh`` (1-D server mesh over the ``agg`` axis): N pads up to
+    ``BLOCK * n_shards`` divisibility, the bundle carries the vector/row
+    ``NamedSharding``s, and every pack jit pins its output to them — the
+    runtime path works on whole logically-global arrays and lets
+    jax place the shards.  :meth:`shard_bounds`/:meth:`leaf_spans` expose
+    the resulting mesh-aware offset table (which device owns which slice
+    of which leaf) for introspection: the parity/property tiers assert
+    the layout against it, and partial-shard consumers (per-shard
+    checkpointing, debugging) read it rather than re-deriving padding.
     """
 
-    def __init__(self, template):
+    def __init__(self, template, mesh=None):
         leaves, treedef = jax.tree.flatten(template)
         if not leaves:
             raise ValueError("cannot bundle an empty pytree")
@@ -66,23 +114,48 @@ class ParamBundle:
         # wire transfer of this structure costs (core/transport.py)
         self.raw_bytes = int(sum(n * jnp.dtype(d).itemsize
                                  for n, d in zip(self.sizes, self.dtypes)))
-        self.padded_size = -(-self.n_params // BLOCK) * BLOCK
-        self._pack = jax.jit(self._pack_impl)
+        self.mesh = mesh
+        self.n_shards = (1 if mesh is None
+                         else int(mesh.shape[psharding.AGG_AXIS]))
+        self.padded_size = padded_size_for(self.n_params, self.n_shards)
+        self.shard_size = self.padded_size // self.n_shards
+        if mesh is None:
+            self.vec_sharding = self.row_sharding = None
+            vkw = rkw = {}
+        else:
+            self.vec_sharding = psharding.agg_vec_sharding(mesh)
+            self.row_sharding = psharding.agg_row_sharding(mesh)
+            vkw = {"out_shardings": self.vec_sharding}
+            rkw = {"out_shardings": self.row_sharding}
+        self._pack = jax.jit(self._pack_impl, **vkw)
         self._unpack = jax.jit(self._unpack_impl)
-        self._pack_many = jax.jit(self._pack_many_impl)
+        self._pack_many = jax.jit(self._pack_many_impl, **rkw)
         # stale rows beyond the live W are zeroed, not just weight-0-masked:
         # a non-finite value left by a past round would turn 0 * inf into
         # NaN inside the fused contraction
         self._pack_rows = jax.jit(
             lambda rows, trees: rows.at[:len(trees)].set(
                 self._pack_many_impl(trees)).at[len(trees):].set(0.0),
-            donate_argnums=(0,))
+            donate_argnums=(0,), **rkw)
         # same row-landing for already-packed vectors (the transport layer
         # decodes payloads straight to flat vectors — no pytree intermediate)
         self._set_rows = jax.jit(
             lambda rows, vecs: rows.at[:len(vecs)].set(
                 jnp.stack(vecs)).at[len(vecs):].set(0.0),
-            donate_argnums=(0,))
+            donate_argnums=(0,), **rkw)
+
+    # --- mesh-aware offsets ---
+    def shard_bounds(self, shard: int) -> Tuple[int, int]:
+        """Global ``[lo, hi)`` param range device ``shard`` owns."""
+        if not 0 <= shard < self.n_shards:
+            raise IndexError(shard)
+        return shard * self.shard_size, (shard + 1) * self.shard_size
+
+    def leaf_spans(self, leaf: int) -> Tuple[tuple, ...]:
+        """Shard-local slices of leaf ``leaf``: ``(shard, local_lo,
+        local_hi, global_lo)`` per device the leaf touches."""
+        o = self.offsets[leaf]
+        return shard_spans(o, o + self.sizes[leaf], self.shard_size)
 
     # --- impls (jitted once per bundle) ---
     def _pack_impl(self, tree):
@@ -124,14 +197,16 @@ class ParamBundle:
 _BUNDLES: Dict[tuple, ParamBundle] = {}
 
 
-def bundle_for(template) -> ParamBundle:
-    """Memoised ParamBundle keyed on (structure, shapes, dtypes)."""
+def bundle_for(template, mesh=None) -> ParamBundle:
+    """Memoised ParamBundle keyed on (structure, shapes, dtypes, mesh) —
+    the server and its transport resolve to the SAME sharded bundle, so
+    decoded payload vectors land in the row buffer shape-exactly."""
     leaves, treedef = jax.tree.flatten(template)
     key = (treedef, tuple((tuple(l.shape), str(jnp.asarray(l).dtype))
-                          for l in leaves))
+                          for l in leaves), mesh)
     b = _BUNDLES.get(key)
     if b is None:
-        b = _BUNDLES[key] = ParamBundle(template)
+        b = _BUNDLES[key] = ParamBundle(template, mesh=mesh)
     return b
 
 
@@ -165,25 +240,75 @@ _weighted_sum_jit = jax.jit(_weighted_sum,
                             static_argnames=("use_pallas", "interpret"))
 
 
+# sharded dispatch: per-(mesh, flags) jits, cached so repeated rounds hit
+# the jit cache exactly like the unsharded path.  The XLA branch is the
+# SAME contraction as `_fused_mix` (GSPMD keeps it shard-local along N, no
+# collective — asserted in tests), so a 1-device mesh is bit-identical to
+# the unsharded jit; the Pallas branch shard_maps the fused kernel.
+
+@functools.lru_cache(maxsize=None)
+def _sharded_mix_jit(mesh, use_pallas: bool, interpret: bool):
+    vs = psharding.agg_vec_sharding(mesh)
+    rs = psharding.agg_row_sharding(mesh)
+
+    def mix(server_flat, rows, wvec):
+        if use_pallas:
+            return fedavg_agg.fedavg_mix_flat_sharded(
+                rows, wvec[1:], server_flat, wvec[0], mesh=mesh,
+                axis=psharding.AGG_AXIS, block_n=BLOCK, interpret=interpret)
+        rows = jax.lax.with_sharding_constraint(rows, rs)
+        server_flat = jax.lax.with_sharding_constraint(server_flat, vs)
+        return wvec[0] * server_flat + jax.lax.dot_general(
+            wvec[1:], rows, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    return jax.jit(mix, donate_argnums=(0,), out_shardings=vs)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_wsum_jit(mesh, use_pallas: bool, interpret: bool):
+    vs = psharding.agg_vec_sharding(mesh)
+    rs = psharding.agg_row_sharding(mesh)
+
+    def wsum(rows, w):
+        if use_pallas:
+            return fedavg_agg.fedavg_agg_flat_sharded(
+                rows, w, mesh=mesh, axis=psharding.AGG_AXIS, block_n=BLOCK,
+                interpret=interpret)
+        rows = jax.lax.with_sharding_constraint(rows, rs)
+        return jax.lax.dot_general(w, rows, (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+
+    return jax.jit(wsum, out_shardings=vs)
+
+
 def fused_merge(server_flat, rows, wvec, use_pallas: Optional[bool] = None,
-                interpret: Optional[bool] = None):
+                interpret: Optional[bool] = None, mesh=None):
     """One-pass ``wvec[0]*server + wvec[1:] @ rows`` on packed buffers.
 
-    ``server_flat`` is donated — callers must treat it as consumed.
+    ``server_flat`` is donated — callers must treat it as consumed.  With
+    ``mesh`` the buffers are N-sharded and the pass runs per shard.
     """
     use_pallas, interpret = pallas_flags(use_pallas, interpret)
-    return _fused_mix_jit(server_flat, rows, jnp.asarray(wvec, jnp.float32),
+    wv = jnp.asarray(wvec, jnp.float32)
+    if mesh is not None:
+        return _sharded_mix_jit(mesh, use_pallas, interpret)(
+            server_flat, rows, wv)
+    return _fused_mix_jit(server_flat, rows, wv,
                           use_pallas=use_pallas, interpret=interpret)
 
 
 def fused_weighted_sum(rows, w, use_pallas: Optional[bool] = None,
-                       interpret: Optional[bool] = None):
+                       interpret: Optional[bool] = None, mesh=None):
     """One-pass ``w @ rows`` (no server term — the alpha>=1 replace-on-
     aggregate case must not read the server buffer at all: the reference
     ``mix_into`` short-circuits there, and ``0 * server`` would turn a
     non-finite server model into NaN instead of replacing it)."""
     use_pallas, interpret = pallas_flags(use_pallas, interpret)
-    return _weighted_sum_jit(rows, jnp.asarray(w, jnp.float32),
+    wv = jnp.asarray(w, jnp.float32)
+    if mesh is not None:
+        return _sharded_wsum_jit(mesh, use_pallas, interpret)(rows, wv)
+    return _weighted_sum_jit(rows, wv,
                              use_pallas=use_pallas, interpret=interpret)
 
 
@@ -202,11 +327,18 @@ class FlatServerState:
     server hands us (re-packed only if the server's tree is not the one we
     produced), and (b) a pre-allocated (W_cap, N) row buffer that worker
     updates are packed into — no fresh ``jnp.stack`` per leaf per round.
+
+    With ``mesh`` both live buffers shard along N over the 1-D server
+    mesh (rows ``P(None, 'agg')``, server mirror ``P('agg')``) and every
+    merge runs per shard — per-device peak live bytes of the substrate
+    shrink linearly with mesh size.
     """
 
-    def __init__(self, template, use_pallas: Optional[bool] = None):
-        self.bundle = bundle_for(template)
+    def __init__(self, template, use_pallas: Optional[bool] = None,
+                 mesh=None):
+        self.bundle = bundle_for(template, mesh)
         self.use_pallas = use_pallas
+        self.mesh = mesh
         self._rows: Optional[jnp.ndarray] = None
         self._server_flat: Optional[jnp.ndarray] = None
         self._server_tree: Optional[object] = None   # strong ref: mirror key
@@ -216,11 +348,26 @@ class FlatServerState:
         return 0 if self._rows is None else int(self._rows.shape[0])
 
     def _ensure_capacity(self, w: int):
-        if self.capacity < w:
-            new = jnp.zeros((w, self.bundle.padded_size), jnp.float32)
+        if self.capacity >= w:
+            return
+        shape = (w, self.bundle.padded_size)
+        if self.mesh is None:
+            new = jnp.zeros(shape, jnp.float32)
             if self._rows is not None:
                 new = new.at[:self.capacity].set(self._rows)
-            self._rows = new
+        elif self._rows is None:
+            # allocate sharded from the start — a replicated-then-reshard
+            # zeros would spike the full (W, N) buffer onto one device,
+            # exactly what the mesh exists to avoid
+            new = jnp.zeros(shape, jnp.float32,
+                            device=self.bundle.row_sharding)
+        else:
+            # rare growth path (W grew): jitted so the copy never leaves
+            # the shards (re-traced per capacity, which only ever grows)
+            new = jax.jit(
+                lambda r: jnp.zeros(shape, jnp.float32).at[:r.shape[0]]
+                .set(r), out_shardings=self.bundle.row_sharding)(self._rows)
+        self._rows = new
 
     def _server_buffer(self, server_tree) -> jnp.ndarray:
         if (self._server_flat is None
@@ -260,14 +407,15 @@ class FlatServerState:
             # short-circuit; also skips the server read entirely)
             wv = np.zeros((self.capacity,), np.float32)
             wv[:n] = w
-            merged = fused_weighted_sum(self._rows, wv, self.use_pallas)
+            merged = fused_weighted_sum(self._rows, wv, self.use_pallas,
+                                        mesh=self.mesh)
         else:
             wvec = np.zeros((self.capacity + 1,), np.float32)
             wvec[0] = 1.0 - alpha
             wvec[1:1 + n] = alpha * w
             server_flat = self._server_buffer(server_tree)
             merged = fused_merge(server_flat, self._rows, wvec,
-                                 self.use_pallas)
+                                 self.use_pallas, mesh=self.mesh)
         out = self.bundle.unpack(merged)
         self._server_flat, self._server_tree = merged, out
         return out
@@ -279,7 +427,7 @@ class FlatServerState:
         rows = self.bundle.pack_many((new_tree, base_tree))
         cur = self.bundle.pack(cur_tree)
         out = fused_merge(cur, rows, np.asarray([1.0, 1.0, -1.0], np.float32),
-                          self.use_pallas)
+                          self.use_pallas, mesh=self.mesh)
         return self.bundle.unpack(out)
 
     def delta_vec(self, cur_tree, new_vec, base_vec) -> jnp.ndarray:
@@ -296,4 +444,4 @@ class FlatServerState:
         cur = self._server_buffer(cur_tree)
         return fused_merge(cur, rows,
                            np.asarray([1.0, 1.0, -1.0], np.float32),
-                           self.use_pallas)
+                           self.use_pallas, mesh=self.mesh)

@@ -49,10 +49,15 @@ class AggregationServer:
                  async_alpha: float = 1.0, async_stale_pow: float = 0.0,
                  async_min_updates: int = 1, async_delta: bool = False,
                  async_latest_table: bool = True,
-                 transport="raw", transport_down: Optional[str] = None):
+                 transport="raw", transport_down: Optional[str] = None,
+                 mesh=None):
         assert mode in ("sync", "async")
         self.address = "server://aggregator"
         self.weights = weights
+        # 1-D aggregation-server mesh (parallel.sharding.agg_mesh): the
+        # packed merge substrate and every link's flat vectors shard along
+        # the parameter axis — None keeps the single-device fused path
+        self.mesh = mesh
         self.version = 0
         self.loop = loop
         self.est = estimator
@@ -88,22 +93,26 @@ class AggregationServer:
         self._flat: Optional[flatbuf.FlatServerState] = None
         if (flatbuf.packable(weights)
                 and os.environ.get("REPRO_AGG_PATH") != "tree"):
-            self._flat = flatbuf.FlatServerState(weights)
+            self._flat = flatbuf.FlatServerState(weights, mesh=mesh)
         # single weight-exchange path: every transfer is a codec'd Payload
         # with exact wire bytes (core/transport.py); transport_down names
         # the downlink codec (None = symmetric with the uplink)
         if isinstance(transport, str):
             transport = transport_mod.Transport(weights, codec=transport,
                                                 down_codec=transport_down,
-                                                raw_bytes=model_bytes)
+                                                raw_bytes=model_bytes,
+                                                mesh=mesh)
         self.transport = transport
         self.total_up_bytes = 0
         self.total_down_bytes = 0
         # decode straight into packed flat rows when the merge fast path is
         # active AND the aggregator has a scalar-weight form (otherwise the
-        # pytree AGGREGATORS fallback needs trees in the cache)
+        # pytree AGGREGATORS fallback needs trees in the cache); the
+        # transport must resolve to the same (mesh-aware) bundle or its
+        # decoded vectors would not match the row buffer's padded width
         self._use_vec = (self._flat is not None
                          and self.transport.flat_capable
+                         and self.transport.bundle is self._flat.bundle
                          and aggregator in agg.UPDATE_WEIGHT_FNS)
 
         self.workers: Dict[str, FLWorker] = {}

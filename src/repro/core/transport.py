@@ -70,6 +70,26 @@ back would double-count it.
 Decode on either side goes straight to a packed flat vector (``base +
 dequantised delta`` fused in one pass, the ``FlatServerState``-style
 dequantise+delta-apply) — no pytree intermediate on the fast path.
+
+Sharded substrate.  ``Transport(mesh=...)`` resolves the SAME mesh-aware
+``ParamBundle`` the server's ``FlatServerState`` uses, so every packed
+vector a link touches (``tx_base``, ``acked_base``, EF residuals, decoded
+payloads) carries the 1-D ``agg`` ``NamedSharding`` — links encode and
+decode against shard-local slices, and decoded responses land in the
+server's shard-local rows without any host ever holding the full buffer.
+
+Multi-server links.  In a multi-aggregator topology several servers
+dispatch down *one* worker's physical channel, but the worker holds ONE
+model — so the downlink ack state is per-WORKER, not per-link.  Passing a
+shared :class:`WorkerAckRegistry` to each server's ``Transport`` makes
+every link to the same worker encode deltas against one shared
+``acked_base``.  The per-link pending dispatch remembers the exact base
+it encoded against (a concurrent peer may advance the shared ack before
+our fetch completes), and the shared downlink EF residual keeps a revert
+CHAIN of in-flight encodes: a cancelled fetch unlinks its own record —
+reverting a peer's entry would double-count its deficit — so any
+interleaving of cancels and completions restores exact pre-encode values
+(property-tested in tests/test_wire_properties.py).
 """
 from __future__ import annotations
 
@@ -79,6 +99,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import topk_quant
 
@@ -222,6 +243,89 @@ def ef_topk_encode(x: jnp.ndarray, *, n_params: int, frac: float,
     return recon, recon, resid, wire
 
 
+class WorkerAckState:
+    """One worker's downlink ack state: the last flat buffer any server
+    knows the worker holds, plus the worker's downlink EF residual.
+
+    The residual is speculative while dispatches are in flight — each
+    delta encode overwrites it assuming delivery.  ``_entries`` is the
+    revert chain: one ``[residual-before-encode, residual-this-encode-
+    wrote]`` record per in-flight encode, in encode order, so any
+    interleaving of cancels and completions across concurrent
+    (multi-server) dispatches leaves the residual at the deficit of the
+    dispatch the worker actually holds — cancelling the newest encode
+    reverts the residual itself, cancelling an older one re-points its
+    successor's revert target past it, and a delivery re-bases every
+    still-in-flight OLDER encode on the state it established (and, when
+    nothing newer is in flight, installs its own deficit: concurrent
+    fetches may complete out of encode order)."""
+
+    __slots__ = ("acked_base", "down_residual", "_entries")
+
+    def __init__(self):
+        self.acked_base: Optional[jnp.ndarray] = None
+        self.down_residual: Optional[jnp.ndarray] = None
+        self._entries: list = []
+
+    def push(self) -> list:
+        e = [self.down_residual, None]    # [res_before, resid_self]
+        self._entries.append(e)
+        return e
+
+    def _index(self, entry) -> int:
+        for i, e in enumerate(self._entries):
+            if e is entry:
+                return i
+        return -1
+
+    def complete(self, entry) -> None:
+        """``entry``'s dispatch was delivered: the worker now holds its
+        reconstruction, so older in-flight encodes revert to the deficit
+        it established, and — unless a newer encode is still speculating
+        on top — so does the live residual (out-of-order completions:
+        the LAST delivery wins, whatever the encode order)."""
+        i = self._index(entry)
+        if i < 0:
+            return
+        for e in self._entries[:i]:
+            e[0] = entry[1]
+        newest = i == len(self._entries) - 1
+        self._entries.pop(i)
+        if newest:
+            self.down_residual = entry[1]
+
+    def cancel(self, entry) -> None:
+        """``entry``'s dispatch was never delivered: unlink it from the
+        revert chain.  The newest entry owns the live residual, so
+        cancelling it reverts the residual itself; cancelling an older
+        entry re-points its successor's revert target past it."""
+        i = self._index(entry)
+        if i < 0:
+            return
+        self._entries.pop(i)
+        if i == len(self._entries):              # was the newest encode
+            self.down_residual = entry[0]
+        else:
+            self._entries[i][0] = entry[0]
+
+
+class WorkerAckRegistry:
+    """Shared per-worker ack state for multi-server topologies: hand ONE
+    registry to every server's ``Transport`` and all their links to the
+    same worker share one ``acked_base`` — each server's downlink delta
+    encodes against the worker's actual state, whichever server last
+    delivered it."""
+
+    def __init__(self):
+        self._states: Dict[str, WorkerAckState] = {}
+
+    def state(self, worker_id: str) -> WorkerAckState:
+        st = self._states.get(worker_id)
+        if st is None:
+            st = self._states[worker_id] = WorkerAckState()
+        return st
+
+
 class Link:
     """One server<->worker channel: per-link codec state.
 
@@ -234,16 +338,30 @@ class Link:
     :meth:`ack_down` at fetch completion).  Each direction carries its own
     error-feedback residual.  Both endpoints of the simulated channel
     share the object, mirroring the thesis' dedicated FTP weight channel.
+
+    The downlink state (``acked_base``/``down_residual``) lives in a
+    :class:`WorkerAckState` — private per link by default, shared across
+    servers when the transports were built with one
+    :class:`WorkerAckRegistry`.
     """
 
-    def __init__(self, transport: "Transport"):
+    def __init__(self, transport: "Transport",
+                 ack: Optional[WorkerAckState] = None):
         self.t = transport
         self.tx_base: Optional[jnp.ndarray] = None   # packed dispatch base
         self.residual: Optional[jnp.ndarray] = None  # uplink EF (topk_ef*)
-        self.acked_base: Optional[jnp.ndarray] = None  # last-acked state
-        self.down_residual: Optional[jnp.ndarray] = None  # downlink EF
-        # in-flight downlink awaiting ack: (payload, residual-before-encode)
+        self._ack = ack if ack is not None else WorkerAckState()
+        # in-flight downlink awaiting ack:
+        # (payload, revert-chain entry or None, pinned encode base or None)
         self._pending_down: Optional[tuple] = None
+
+    @property
+    def acked_base(self) -> Optional[jnp.ndarray]:
+        return self._ack.acked_base
+
+    @property
+    def down_residual(self) -> Optional[jnp.ndarray]:
+        return self._ack.down_residual
 
     # --- shared flat-delta codec stages ---
     def _codec_encode(self, delta: jnp.ndarray, residual, spec: CodecSpec
@@ -298,9 +416,10 @@ class Link:
         vec = t._pack_down(weights_tree)
         if self.acked_base is None:
             # first dispatch: the worker holds no base yet -> raw fallback
+            # (touches no residual, so it joins no revert chain)
             self.tx_base = vec
             payload = Payload("raw", t.raw_bytes, weights_tree)
-            self._pending_down = (payload, self.down_residual)
+            self._pending_down = (payload, None, None)
             return payload
         # the delta vs the worker's ACTUAL (acked) state is already the
         # error-feedback-corrected quantity: it re-carries every bit of
@@ -309,22 +428,32 @@ class Link:
         # dispatch and diverge.  For EF codecs _codec_encode still emits
         # the residual OUTPUT (x - recon = the worker's post-fetch
         # deficit), the genuine per-link downlink EF memory.
-        delta = vec - self.acked_base
-        res_before = self.down_residual
-        payload, self.down_residual = self._codec_encode(delta, None, sd)
+        base = self.acked_base
+        delta = vec - base
+        entry = self._ack.push()             # joins the revert chain
+        payload, new_res = self._codec_encode(delta, None, sd)
+        self._ack.down_residual = entry[1] = new_res
         # the worker-visible model after this fetch (== what decode_down
         # produces, same fused op on the same inputs): the uplink base
-        self.tx_base = self._codec_apply(payload.data, sd, self.acked_base)
-        self._pending_down = (payload, res_before)
+        self.tx_base = self._codec_apply(payload.data, sd, base)
+        # the pending entry pins the encode-time base: a multi-server peer
+        # may advance the shared ack before this fetch completes, and the
+        # delta only decodes against the base it was cut from
+        self._pending_down = (payload, entry, base)
         return payload
 
     def decode_down_vec(self, payload: Payload) -> jnp.ndarray:
         """Payload -> packed flat f32 vector of the dispatched model,
-        reconstructed against the link's acked base."""
+        reconstructed against the base it was encoded from (the pending
+        dispatch's pinned base; the link's acked base otherwise)."""
         if payload.codec == "raw":
             return self.t._pack_down(payload.data)
-        return self._codec_apply(payload.data, self.t.spec_down,
-                                 self.acked_base)
+        base = self.acked_base
+        if (self._pending_down is not None
+                and self._pending_down[0] is payload
+                and self._pending_down[2] is not None):
+            base = self._pending_down[2]
+        return self._codec_apply(payload.data, self.t.spec_down, base)
 
     def decode_down(self, payload: Payload):
         """Payload -> weight pytree (no ack bookkeeping — raw downlinks
@@ -339,13 +468,17 @@ class Link:
         pending may ack: a stale or already-cancelled fetch must not
         advance the ack (a raw payload with nothing pending is allowed —
         re-acking a full model the worker genuinely received is exact)."""
+        entry = None
         if self._pending_down is not None:
             if self._pending_down[0] is not payload:
                 return               # stale fetch: not the pending dispatch
+            entry = self._pending_down[1]
         elif payload.codec != "raw":
             return                   # delta payload already acked/cancelled
-        self.acked_base = vec
+        self._ack.acked_base = vec
         self._pending_down = None
+        if entry is not None:
+            self._ack.complete(entry)
 
     def complete_fetch(self, payload: Payload):
         """Worker-side fetch completion: decode against the local acked
@@ -369,12 +502,19 @@ class Link:
         mid-fetch): the ack has not advanced, so the next dispatch's delta
         ``model - acked_base`` already re-carries this payload's mass —
         the EF residual must revert to its pre-encode value (crediting the
-        reconstruction back, as the uplink does, would double-count)."""
+        reconstruction back, as the uplink does, would double-count).
+
+        Shared-ack (multi-server) links revert through the chain: if a
+        peer encoded after us, the live residual is the peer's accounting
+        entry and its own delta vs the (unchanged) acked base re-carries
+        our mass — so our record is unlinked from the chain instead of
+        clobbering the peer's value (reverting it would double-count)."""
         if self._pending_down is None or self._pending_down[0] is not payload:
             return
-        _, res_before = self._pending_down
+        _, entry, _base = self._pending_down
         self._pending_down = None
-        self.down_residual = res_before
+        if entry is not None:
+            self._ack.cancel(entry)
 
     # --- uplink: worker -> server (codec'd response) ---
     def upfront_up_bytes(self) -> Optional[int]:
@@ -432,13 +572,17 @@ class Transport:
     for the PR-2-era uplink-only compression).  ``raw_bytes`` defaults to
     the template's native byte size; pass the server's ``model_bytes`` to
     pin it (required for non-packable weight trees, where only the ``raw``
-    codec applies).
+    codec applies).  ``mesh`` (the server's 1-D ``agg`` mesh) resolves the
+    mesh-aware bundle, so links hold and codec shard-local slices;
+    ``ack_registry`` shares per-worker downlink ack state across servers
+    (multi-aggregator topologies).
     """
 
     def __init__(self, template, codec: str = "raw", *,
                  down_codec: Optional[str] = None, frac: float = 0.1,
                  raw_bytes: Optional[int] = None, use_pallas=None,
-                 interpret=None):
+                 interpret=None, mesh=None,
+                 ack_registry: Optional[WorkerAckRegistry] = None):
         if down_codec is None:
             down_codec = codec
         for c in (codec, down_codec):
@@ -448,9 +592,19 @@ class Transport:
         self.spec_up = CODECS[codec]
         self.spec_down = CODECS[down_codec]
         self.frac = float(frac)
+        # codec stages run inside plain jit, and Pallas calls do NOT
+        # auto-partition under GSPMD (only the merge kernels are
+        # shard_map'ed) — on a >1-device mesh the codec must take the XLA
+        # oracle path, which partitions shard-locally and is the kernels'
+        # bit-parity target anyway
+        if (mesh is not None and use_pallas is None
+                and int(np.prod(mesh.devices.shape)) > 1):
+            use_pallas = False
         self.use_pallas = use_pallas
         self.interpret = interpret
-        self.bundle = (flatbuf.bundle_for(template)
+        self.mesh = mesh
+        self._ack_registry = ack_registry
+        self.bundle = (flatbuf.bundle_for(template, mesh)
                        if flatbuf.packable(template) else None)
         if self.bundle is None and (self.spec_up.delta or
                                     self.spec_down.delta):
@@ -498,7 +652,9 @@ class Transport:
     def link(self, worker_id: str) -> Link:
         l = self._links.get(worker_id)
         if l is None:
-            l = self._links[worker_id] = Link(self)
+            ack = (self._ack_registry.state(worker_id)
+                   if self._ack_registry is not None else None)
+            l = self._links[worker_id] = Link(self, ack)
         return l
 
     # --- expected costs (selection time budgets / straggler timeouts) ---

@@ -7,6 +7,15 @@ weighted sum in a single pass — per-byte traffic = (W+1)/(2W-1) of the naive
 chain and no intermediate materialisation.
 
 Block: (W, 512) f32 tiles (W workers is small: 2..32), 128-lane aligned.
+
+Sharded variants (``*_sharded``): the same kernels over a 1-D aggregation
+server mesh.  The packed (W, N) layout puts every worker's lane for a given
+parameter on ONE device when N is sharded, so the staleness-weighted
+W-reduce runs per-shard with no cross-device traffic; the only collective
+in the whole merge pipeline is the optional ``all_gather`` that
+re-materialises a replicated result (``gather=True`` — unpack/eval
+consumers).  Pallas calls do not auto-partition under GSPMD, hence the
+explicit ``shard_map``.
 """
 from __future__ import annotations
 
@@ -15,6 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 
 def _agg_kernel(w_ref, x_ref, o_ref):
@@ -112,3 +123,71 @@ def fedavg_delta_flat(server: jnp.ndarray, deltas: jnp.ndarray,
     mode / FedBuff-style additive composition), same fused single pass."""
     return fedavg_mix_flat(deltas, weights, server, 1.0,
                            block_n=block_n, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Sharded variants: shard_map over a 1-D server mesh, N-sharded buffers
+# ---------------------------------------------------------------------------
+
+def _check_shardable(N: int, mesh, axis: str) -> int:
+    D = mesh.shape[axis]
+    if N % D:
+        raise ValueError(f"flat buffer width {N} not divisible by the "
+                         f"{D}-device '{axis}' mesh axis — pack with a "
+                         f"mesh-aware ParamBundle (pads N to divisibility)")
+    return D
+
+
+def fedavg_mix_flat_sharded(stacked: jnp.ndarray, weights: jnp.ndarray,
+                            server: jnp.ndarray, server_scale, *, mesh,
+                            axis: str = "agg", block_n: int = 512,
+                            interpret: bool = False,
+                            gather: bool = False) -> jnp.ndarray:
+    """``server_scale * server + weights @ stacked`` over a 1-D server mesh.
+
+    ``stacked`` (W, N) is sharded ``P(None, axis)`` and ``server`` (N,)
+    ``P(axis)``; each device streams its local (W, N/D) block through the
+    fused single-pass kernel, so the staleness-weighted sum + alpha-mix run
+    entirely per-shard — the packed layout keeps every worker's lane of a
+    parameter on one device and the cross-device reduce collapses to the
+    one optional collective (``gather=True``: an ``all_gather`` along
+    ``axis`` that returns the replicated (N,) result; default keeps the
+    output sharded as the next round's server buffer)."""
+    W, N = stacked.shape
+    _check_shardable(N, mesh, axis)
+    wvec = jnp.concatenate([
+        jnp.asarray(server_scale, jnp.float32).reshape(1),
+        weights.astype(jnp.float32).reshape(W)])
+
+    def local(wv, x, s):
+        out = fedavg_mix_flat(x, wv[1:], s, wv[0], block_n=block_n,
+                              interpret=interpret)
+        if gather:
+            out = jax.lax.all_gather(out, axis, tiled=True)
+        return out
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(), P(None, axis), P(axis)),
+                     out_specs=P() if gather else P(axis),
+                     check_rep=False)(wvec, stacked, server)
+
+
+def fedavg_agg_flat_sharded(stacked: jnp.ndarray, weights: jnp.ndarray, *,
+                            mesh, axis: str = "agg", block_n: int = 512,
+                            interpret: bool = False,
+                            gather: bool = False) -> jnp.ndarray:
+    """Sharded ``weights @ stacked`` (no server term — the alpha>=1
+    replace-on-aggregate path must not read the server buffer; see
+    ``flatbuf.fused_weighted_sum``), same per-shard kernel launch."""
+    _, N = stacked.shape
+    _check_shardable(N, mesh, axis)
+
+    def local(w, x):
+        out = fedavg_agg_flat(x, w, block_n=block_n, interpret=interpret)
+        if gather:
+            out = jax.lax.all_gather(out, axis, tiled=True)
+        return out
+
+    return shard_map(local, mesh=mesh, in_specs=(P(), P(None, axis)),
+                     out_specs=P() if gather else P(axis),
+                     check_rep=False)(weights, stacked)

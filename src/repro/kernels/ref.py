@@ -36,6 +36,25 @@ def reference_fedavg(stacked, weights):
                       weights.astype(jnp.float32)).astype(stacked.dtype)
 
 
+def reference_fedavg_sharded(stacked, weights, server, server_scale,
+                             n_shards: int):
+    """Oracle for the shard_map'ed merge: slice N into ``n_shards`` equal
+    ranges, run the mix per shard, concatenate.  The packed (W, N) layout
+    keeps the W-reduce shard-local, so this must equal the global
+    ``server_scale * server + weights @ stacked`` — any cross-shard
+    dependency in the sharded kernel would break the equality."""
+    W, N = stacked.shape
+    assert N % n_shards == 0, (N, n_shards)
+    S = N // n_shards
+    outs = []
+    for d in range(n_shards):
+        sl = slice(d * S, (d + 1) * S)
+        outs.append(server_scale * server[sl].astype(jnp.float32)
+                    + jnp.einsum("wn,w->n", stacked[:, sl].astype(jnp.float32),
+                                 weights.astype(jnp.float32)))
+    return jnp.concatenate(outs).astype(server.dtype)
+
+
 def reference_topk_quant_encode(x, thresh, scale):
     """Oracle for the fused topk-threshold + int8 quantise encode: entries
     with |x| >= thresh are linearly quantised to int8 (zero elsewhere); the

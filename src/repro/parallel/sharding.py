@@ -9,6 +9,10 @@ Layout (production mesh, v5e):
   * ``pod``   — data-parallel across pods in the sync baseline; the
                 *federated* axis for the paper's technique (local SGD per pod,
                 cross-pod weight aggregation every H steps).
+  * ``agg``   — the aggregation-*server* mesh (core/flatbuf.py): the packed
+                flat parameter axis N of the server model and the (W, N)
+                update-row buffer shard 1-D over it, so per-device live bytes
+                of the merge substrate shrink linearly with mesh size.
 
 A dim is only sharded when divisible by the axis size, so the same rules
 serve the 256-chip pod, the 512-chip 2-pod mesh, and single-device tests.
@@ -18,15 +22,55 @@ projections stay FSDP-only.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 def _sizes(mesh):
     return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+# ---------------------------------------------------------------------------
+# Aggregation-server mesh (the sharded flat-buffer merge substrate)
+# ---------------------------------------------------------------------------
+
+AGG_AXIS = "agg"
+
+
+def agg_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D aggregation-server mesh over ``AGG_AXIS`` (the first
+    ``n_devices`` local devices; all of them when None)."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"server mesh of {n} devices, but only "
+                         f"{len(devs)} available (CPU runs: set "
+                         f"XLA_FLAGS=--xla_force_host_platform_device_count)")
+    return Mesh(np.asarray(devs[:n]), (AGG_AXIS,))
+
+
+def agg_vec_spec() -> P:
+    """Packed flat parameter vector (N,): sharded along N."""
+    return P(AGG_AXIS)
+
+
+def agg_row_spec() -> P:
+    """(W, N) update-row buffer: worker rows replicated, N sharded — every
+    device holds ALL workers' slices of its own parameter range, so the
+    W-reduce of the merge is shard-local (no collective)."""
+    return P(None, AGG_AXIS)
+
+
+def agg_vec_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, agg_vec_spec())
+
+
+def agg_row_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, agg_row_spec())
 
 
 def dp_axes(mesh) -> Tuple[str, ...]:

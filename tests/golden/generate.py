@@ -42,6 +42,18 @@ TRANSPORTS = {
     "uplink_only": dict(transport="topk_ef+int8", transport_frac=0.1),
 }
 
+# sharded substrate (PR 4): a 1-device server mesh must be BIT-identical
+# to the fused single-device path, so its goldens are the very same
+# fixtures — no new data, just new spellings of the pinned configs.
+# Maps alias -> (fixture key prefix, run_fl kwargs).
+MESH1_ALIASES = {
+    "raw_mesh1": ("raw", dict(transport="raw", server_mesh=1)),
+    "uplink_only_mesh1": ("uplink_only",
+                          dict(transport="topk_ef+int8",
+                               transport_down="raw", transport_frac=0.1,
+                               server_mesh=1)),
+}
+
 
 def history_record(h):
     return [{"time": p.time.hex(), "version": p.version,

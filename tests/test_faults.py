@@ -1,0 +1,210 @@
+"""Fault-injection + elastic-pool coverage for ``runtime/faults.py``.
+
+The FL system's failure story is: a killed worker goes silent (its
+in-flight training never completes), the straggler timeout converts the
+silence into a ``failed`` profile flag, selection excludes it, and
+recovery/join re-admits it — all while the transport byte counters, the
+downlink ack protocol, and the sharded (W, N) row buffer stay *exact*:
+nothing a dead worker never delivered may be counted, acked, or left
+behind in a live merge row.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import hist_rec as _hist_rec
+
+from repro.core import TABLE_4_1, make_setup, transport
+from repro.core.estimator import TimeEstimator, WorkerProfile
+from repro.core.events import EventLoop
+from repro.core.selection import make_selector
+from repro.core.server import AggregationServer
+from repro.core.warehouse import Pointer
+from repro.core.worker import FLWorker
+from repro.parallel import sharding as psh
+from repro.runtime.faults import ElasticPool, FaultInjector
+
+SETUP_KW = dict(seed=0, noise=0.25, batch_size=32, het="strong")
+
+
+def _mini_setup(n=4):
+    return make_setup([1] * n, **SETUP_KW)
+
+
+def _system(setup, *, mode="sync", codec="topk_ef+int8", server_mesh=None,
+            max_rounds=6, epochs=2, spy=None):
+    """Manual run_fl: returns (loop, server) with optional encode_down spy
+    so tests can cross-check HistoryPoint counters against the actual
+    payloads that crossed the wire."""
+    loop = EventLoop()
+    est = TimeEstimator(server_freq=3.0, t_onebatch_server=0.05)
+    mesh = None if server_mesh is None else psh.agg_mesh(server_mesh)
+    tr = transport.Transport(setup.weights0, codec=codec, frac=0.1,
+                             raw_bytes=setup.model_bytes, mesh=mesh)
+    if spy is not None:
+        orig_link = tr.link
+
+        def spying_link(wid):
+            l = orig_link(wid)
+            if not getattr(l, "_spied", False):
+                l._spied = True
+                orig_enc = l.encode_down
+
+                def enc(w, _orig=orig_enc):
+                    p = _orig(w)
+                    spy.append(p.wire_bytes)
+                    return p
+                l.encode_down = enc
+            return l
+        tr.link = spying_link
+    server = AggregationServer(
+        weights=setup.weights0, loop=loop, estimator=est,
+        selector=make_selector("all", est, tr.expected_oneway_bytes),
+        eval_fn=setup.eval_fn, model_bytes=setup.model_bytes, mode=mode,
+        epochs_per_round=epochs, max_rounds=max_rounds, transport=tr,
+        mesh=mesh)
+    for prof, shard in zip(setup.profiles, setup.shards):
+        server.add_worker(FLWorker(prof.worker_id, profile=prof, data=shard,
+                                   train_fn=setup.train_fn, loop=loop))
+    return loop, server
+
+
+# ---------------- FaultInjector: kill / recover ----------------
+
+def test_kill_then_recover_cycles_through_selection():
+    """A killed worker is excluded after the straggler timeout flags it;
+    recovery re-admits it — visible as n_updates dipping then restoring."""
+    setup = _mini_setup(4)
+    loop, server = _system(setup, max_rounds=8)
+    inj = FaultInjector(loop, server)
+    inj.kill_at(0.05, "w1")          # dies inside round 1
+    inj.recover_at(2.5, "w1")        # ~3 dead rounds later
+    server.start()
+    loop.run(max_events=100_000)
+    n_upd = [p.n_updates for p in server.history[1:]]
+    assert n_upd[0] == 3             # round 1 closed by timeout without w1
+    assert any(n == 4 for n in n_upd[1:]), \
+        "recovered worker never re-selected"
+    # while dead, w1 is excluded at selection time (selected == 3)
+    dead_rounds = [p for p in server.history[1:] if p.selected == 3]
+    assert dead_rounds, "failed worker was still being selected"
+
+
+def test_byte_counters_exact_across_mid_round_deaths():
+    """HistoryPoint counters == sum of actually-encoded dispatch bytes /
+    delivered response bytes, with deaths landing mid-round — on the
+    sharded substrate, and bit-identical to the unsharded run under the
+    same fault schedule."""
+    recs = []
+    for server_mesh in (None, 1):
+        sent_down, delivered_up = [], []
+        setup = _mini_setup(4)
+        loop, server = _system(setup, mode="async", server_mesh=server_mesh,
+                               max_rounds=8, spy=sent_down)
+        orig_resp = server._on_response
+
+        def spying_response(res, _server=server, _orig=orig_resp,
+                            _up=delivered_up):
+            if not _server.done:
+                _up.append(res.up_bytes)
+            _orig(res)
+        server._on_response = spying_response
+        inj = FaultInjector(loop, server)
+        inj.kill_at(0.2, "w2")       # dies mid-round (fetch/train/respond)
+        inj.kill_at(0.9, "w0")
+        inj.recover_at(1.6, "w2")
+        server.start()
+        loop.run(max_events=100_000)
+        h = server.history
+        assert h[-1].down_bytes == sum(sent_down) == server.total_down_bytes
+        assert h[-1].up_bytes == sum(delivered_up) == server.total_up_bytes
+        for prev, cur in zip(h, h[1:]):
+            assert cur.up_bytes >= prev.up_bytes
+            assert cur.down_bytes >= prev.down_bytes
+        recs.append(_hist_rec(h))
+    assert recs[0] == recs[1], "sharded faulty run diverged from fused"
+
+
+def test_death_mid_fetch_never_advances_ack():
+    """A worker dying between dispatch and fetch-complete must leave the
+    link exactly as a cancelled fetch would: pending cleared, ack not
+    advanced, EF residual reverted — and the re-dispatch after recovery
+    starts from the raw first-contact fallback."""
+    base = _mini_setup(1).weights0
+    loop = EventLoop()
+    prof = WorkerProfile("w0", bandwidth=1e3, n_batches=1)   # slow fetch
+    w = FLWorker("w0", profile=prof,
+                 data={"x": np.zeros((4, 4)), "y": np.zeros((4,))},
+                 train_fn=lambda p, x, y, e: p, loop=loop)
+    t = transport.Transport(base, codec="topk_ef+int8", frac=0.1)
+    link = t.link("w0")
+    ptr = Pointer("server://a", "m")
+    w.add_server(ptr)
+    down = link.encode_down(base)
+    delivered = []
+    w.train_async(ptr, down, 0, 1, link, delivered.append)
+    assert w._fetching
+    loop.schedule(1e-6, lambda: setattr(prof, "failed", True))  # mid-fetch
+    loop.run()
+    assert not delivered and not w._fetching and not w.busy
+    assert link.acked_base is None            # ack never advanced
+    assert link._pending_down is None         # pending rolled back
+    prof.failed = False                       # recovery
+    redo = link.encode_down(base)
+    assert redo.codec == "raw"                # still first-contact
+    w.train_async(ptr, redo, 0, 1, link, delivered.append)
+    loop.run()
+    assert delivered and link.acked_base is not None
+
+
+@pytest.mark.parametrize("server_mesh", [None, 1])
+def test_row_buffer_reclamation_across_deaths(server_mesh):
+    """Dead workers' rows must be reclaimed (zeroed), not weight-0-masked:
+    round r merges fewer updates than round r-1 after a death, and the
+    stale tail rows of the (possibly sharded) persistent buffer are zero
+    so they can never poison a later merge."""
+    setup = _mini_setup(4)
+    loop, server = _system(setup, server_mesh=server_mesh, max_rounds=6)
+    inj = FaultInjector(loop, server)
+    inj.kill_at(1.2, "w3")           # a few full-strength rounds first
+    server.start()
+    loop.run(max_events=100_000)
+    st = server._flat
+    n_last = server.history[-1].n_updates
+    assert 0 < n_last < 4            # the last merge ran under-strength
+    assert st.capacity >= 4          # ...in a buffer sized for full rounds
+    tail = st._rows[n_last:]
+    assert bool(jnp.all(tail == 0.0)), "stale rows not reclaimed"
+    if server_mesh:
+        assert st._rows.sharding.spec == psh.agg_row_spec()
+
+
+# ---------------- ElasticPool: join / leave ----------------
+
+def test_elastic_join_and_leave_mid_training():
+    """A worker joining mid-run gets selected and contributes updates; a
+    leaving worker disappears from the registry and later rounds shrink —
+    without tripping the byte accounting."""
+    setup = _mini_setup(4)
+    loop, server = _system(setup, max_rounds=8)
+    pool = ElasticPool(loop, server)
+    # the 4th shard's data goes to a late joiner instead
+    late_prof, late_shard = setup.profiles[3], setup.shards[3]
+    server.remove_worker("w3")
+    joiner = FLWorker("w9", profile=WorkerProfile(
+        "w9", cpu_freq=late_prof.cpu_freq, cpu_prop=late_prof.cpu_prop,
+        bandwidth=late_prof.bandwidth, n_batches=late_prof.n_batches),
+        data=late_shard, train_fn=setup.train_fn, loop=loop)
+    pool.join_at(1.0, joiner)
+    pool.leave_at(2.2, "w0")
+    server.start()
+    loop.run(max_events=100_000)
+    h = server.history
+    assert "w9" in server.workers and "w0" not in server.workers
+    n_upd = [p.n_updates for p in h[1:]]
+    assert n_upd[0] == 3             # pre-join strength
+    assert max(n_upd) == 4           # joiner participated
+    assert n_upd[-1] == 3            # post-leave strength
+    for prev, cur in zip(h, h[1:]):  # counters stay cumulative/monotone
+        assert cur.up_bytes >= prev.up_bytes
+        assert cur.down_bytes >= prev.down_bytes

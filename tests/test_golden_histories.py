@@ -30,12 +30,19 @@ MODES, SETUP_KW = _gen.MODES, _gen.SETUP_KW
 EP, ROUNDS, history_record = _gen.EP, _gen.ROUNDS, _gen.history_record
 
 # the PR-3 spellings of the pinned PR-2 configs: transport_down="raw"
-# reproduces the era when only the uplink was codec'd
+# reproduces the era when only the uplink was codec'd.  The PR-4 mesh1
+# aliases (generate.MESH1_ALIASES) run the SAME configs on a 1-device
+# server mesh and are pinned float-hex-identical to the same fixtures:
+# sharding the substrate must not move a single bit.
 TRANSPORTS = {
     "raw": dict(transport="raw"),
     "uplink_only": dict(transport="topk_ef+int8", transport_down="raw",
                         transport_frac=0.1),
 }
+TRANSPORTS.update({alias: kw for alias, (_, kw)
+                   in _gen.MESH1_ALIASES.items()})
+_FIXTURE_OF = {alias: base for alias, (base, _)
+               in _gen.MESH1_ALIASES.items()}
 
 CASES = [(t, m) for t in TRANSPORTS for m in MODES]
 
@@ -43,7 +50,8 @@ CASES = [(t, m) for t in TRANSPORTS for m in MODES]
 @pytest.mark.parametrize("tname,mname", CASES,
                          ids=[f"{t}-{m}" for t, m in CASES])
 def test_history_bit_identical_to_pr2(tname, mname):
-    golden = json.loads(GOLDEN.read_text())[f"{tname}/{mname}"]
+    fixture = _FIXTURE_OF.get(tname, tname)
+    golden = json.loads(GOLDEN.read_text())[f"{fixture}/{mname}"]
     setup = make_setup(TABLE_4_1["mnist_even"], **SETUP_KW)
     h = run_fl(setup, epochs_per_round=EP, max_rounds=ROUNDS,
                **MODES[mname], **TRANSPORTS[tname])

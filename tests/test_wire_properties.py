@@ -5,17 +5,26 @@ fractions: ``decode(encode(x))`` plus the error-feedback residual
 conserves the update's mass, and ``Payload.wire_bytes`` exactly matches
 the CodecSpec byte formula (bitmap + scales + payload itemsize).
 
+Sharded-substrate properties (PR 4): the mesh-aware shard layout slices
+every leaf exactly once (mass-conserving for arbitrary shard counts), a
+1-device-mesh transport/merge round-trips bit-identically to the
+unsharded spelling with equal wire bytes, and the multi-server
+shared-acked-base link never double-counts downlink EF residual when a
+concurrent fetch is cancelled.
+
 Guarded with ``pytest.importorskip``: ``hypothesis`` is a dev-only extra
 (see requirements-dev.txt) and the tier-1 suite must run without it.
 """
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st   # noqa: E402
 
-from repro.core import transport                           # noqa: E402
+from repro.core import flatbuf, transport                  # noqa: E402
+from repro.parallel import sharding as psh                 # noqa: E402
 
 CODECS = ["raw", "delta", "int8", "topk_ef", "topk_ef+int8"]
 
@@ -130,6 +139,156 @@ def test_raw_wire_bytes_equal_native_leaf_bytes(shapes, seed):
     link = t.link("w0")
     assert link.encode_down(tree).wire_bytes == want
     assert link.encode_up(tree).wire_bytes == want
+
+
+# ---------------- sharded substrate ----------------
+
+@given(shapes=shapes_st, seed=st.integers(0, 2**16),
+       n_shards=st.integers(1, 5))
+@settings(deadline=None, max_examples=15)
+def test_shard_layout_slices_conserve_mass(shapes, seed, n_shards):
+    """The mesh-aware offset table covers every parameter exactly once
+    for ANY shard count: concatenating the shard-local slices of the
+    padded pack rebuilds it bit-for-bit (so slicing conserves mass), and
+    every leaf's spans tile the leaf exactly."""
+    tree = _tree(shapes, seed)
+    b = flatbuf.bundle_for(tree)
+    n = b.n_params
+    padded = flatbuf.padded_size_for(n, n_shards)
+    assert padded % (flatbuf.BLOCK * n_shards) == 0
+    shard_size = padded // n_shards
+    vec = np.zeros((padded,), np.float32)
+    vec[:b.padded_size] = np.asarray(b.pack(tree))
+    # bit-exact reassembly of disjoint slices IS mass conservation (a
+    # scalar-sum comparison would be float-association-sensitive)
+    parts = [vec[d * shard_size:(d + 1) * shard_size]
+             for d in range(n_shards)]
+    assert np.array_equal(np.concatenate(parts), vec)
+    for i, (off, sz) in enumerate(zip(b.offsets, b.sizes)):
+        spans = flatbuf.shard_spans(off, off + sz, shard_size)
+        covered = []
+        for shard, lo, hi, glo in spans:
+            assert 0 <= lo < hi <= shard_size
+            assert shard * shard_size + lo == glo
+            covered.append(vec[glo:glo + (hi - lo)])
+        leaf = np.asarray(jax.tree.leaves(tree)[i]).reshape(-1)
+        assert np.array_equal(np.concatenate(covered),
+                              leaf.astype(np.float32))
+
+
+@pytest.mark.parametrize("codec", ["delta", "int8", "topk_ef+int8"])
+@given(shapes=shapes_st, frac=frac_st, seed=st.integers(0, 2**16))
+@settings(deadline=None, max_examples=10)
+def test_mesh1_shard_local_roundtrip_bitexact(codec, shapes, frac, seed):
+    """A 1-device server mesh is the degenerate sharding: every link
+    codec stage operates on (one) shard-local slice, and the round trip
+    must be bit-identical to the unsharded spelling with equal
+    wire_bytes — merge_rows/delta_vec included."""
+    mesh = psh.agg_mesh(1)
+    base = _tree(shapes, seed)
+    new = _tree(shapes, seed + 1, scale=0.5)
+    ts = transport.Transport(base, codec=codec, down_codec="raw", frac=frac,
+                             mesh=mesh)
+    tu = transport.Transport(base, codec=codec, down_codec="raw", frac=frac)
+    ls, lu = ts.link("w0"), tu.link("w0")
+    ls.encode_down(base), lu.encode_down(base)
+    ps, pu = ls.encode_up(new), lu.encode_up(new)
+    assert ps.wire_bytes == pu.wire_bytes
+    vs, vu = ls.decode_up_vec(ps), lu.decode_up_vec(pu)
+    assert jnp.array_equal(vs, vu)
+    # merge_rows + delta_vec on the mesh-1 substrate == unsharded, bitwise
+    sts = flatbuf.FlatServerState(base, mesh=mesh)
+    stu = flatbuf.FlatServerState(base)
+    ms = sts.merge_rows(base, [vs], [1.0], alpha=0.6)
+    mu = stu.merge_rows(base, [vu], [1.0], alpha=0.6)
+    assert all(bool(jnp.all(a == b)) for a, b in
+               zip(jax.tree.leaves(ms), jax.tree.leaves(mu)))
+    ds = sts.delta_vec(ms, vs, ts.bundle.pack(base))
+    du = stu.delta_vec(mu, vu, tu.bundle.pack(base))
+    assert jnp.array_equal(ds, du)
+
+
+@pytest.mark.parametrize("codec", ["delta", "topk_ef", "topk_ef+int8"])
+@given(shapes=shapes_st, frac=frac_st, seed=st.integers(0, 2**16),
+       cancel_first=st.booleans())
+@settings(deadline=None, max_examples=10)
+def test_shared_acked_base_never_double_counts_on_cancel(
+        codec, shapes, frac, seed, cancel_first):
+    """Multi-server links sharing one acked base: two servers encode
+    concurrent downlinks against the same acked state; one fetch is
+    cancelled, the other completes.  The completed dispatch's accounting
+    must close exactly — ``acked_base + down_residual == pack(model)`` —
+    i.e. the cancelled peer neither reverts the survivor's residual
+    (double-crediting) nor advances the shared ack."""
+    base = _tree(shapes, seed)
+    reg = transport.WorkerAckRegistry()
+    tA = transport.Transport(base, codec="raw", down_codec=codec, frac=frac,
+                             ack_registry=reg)
+    tB = transport.Transport(base, codec="raw", down_codec=codec, frac=frac,
+                             ack_registry=reg)
+    lA, lB = tA.link("w0"), tB.link("w0")
+    # first contact through A advances the SHARED ack: B sees it too
+    lA.complete_fetch(lA.encode_down(base))
+    assert lB.acked_base is lA.acked_base
+    acked0 = lB.acked_base
+    mA = _tree(shapes, seed + 1, scale=0.5)
+    mB = _tree(shapes, seed + 2, scale=0.5)
+    pA = lA.encode_down(mA)          # both encode vs the same acked base
+    pB = lB.encode_down(mB)
+    assert pA.codec == codec and pB.codec == codec
+    if cancel_first:
+        lA.restore_downlink(pA)      # A cancelled: B's residual survives
+        assert lB.acked_base is acked0              # ack untouched
+        survivor, model = lB, mB
+        survivor.complete_fetch(pB)
+    else:
+        lB.restore_downlink(pB)      # B cancelled: reverts to A's entry
+        assert lA.acked_base is acked0
+        survivor, model = lA, mA
+        survivor.complete_fetch(pA)
+    target = tA.bundle.pack(model)
+    resid = (survivor.down_residual if survivor.down_residual is not None
+             else 0.0)
+    err = float(jnp.max(jnp.abs(survivor.acked_base + resid - target)))
+    assert err < 1e-4
+    # a fresh post-cancel dispatch still closes its books exactly
+    m3 = _tree(shapes, seed + 3, scale=0.5)
+    l3 = survivor
+    l3.complete_fetch(l3.encode_down(m3))
+    resid = (l3.down_residual if l3.down_residual is not None else 0.0)
+    assert float(jnp.max(jnp.abs(
+        l3.acked_base + resid - tA.bundle.pack(m3)))) < 1e-4
+    # BOTH concurrent fetches cancelled (either unlink order): the revert
+    # chain must restore the residual to its exact pre-both-encodes value,
+    # never a dead peer's intermediate entry
+    res0 = lA.down_residual
+    acked1 = lA.acked_base
+    pA2 = lA.encode_down(_tree(shapes, seed + 4, scale=0.5))
+    pB2 = lB.encode_down(_tree(shapes, seed + 5, scale=0.5))
+    if cancel_first:
+        lA.restore_downlink(pA2), lB.restore_downlink(pB2)
+    else:
+        lB.restore_downlink(pB2), lA.restore_downlink(pA2)
+    assert lA.acked_base is acked1
+    if res0 is None:
+        assert lA.down_residual is None
+    else:
+        assert jnp.array_equal(lA.down_residual, res0)
+    # BOTH complete, in either order: concurrent fetches may finish out
+    # of encode order, and the LAST delivery's deficit must be the
+    # residual that survives (the worker holds that reconstruction)
+    m6 = _tree(shapes, seed + 6, scale=0.5)
+    m7 = _tree(shapes, seed + 7, scale=0.5)
+    pA3, pB3 = lA.encode_down(m6), lB.encode_down(m7)
+    if cancel_first:                 # complete out of encode order
+        lB.complete_fetch(pB3), lA.complete_fetch(pA3)
+        last = m6
+    else:
+        lA.complete_fetch(pA3), lB.complete_fetch(pB3)
+        last = m7
+    resid = (lA.down_residual if lA.down_residual is not None else 0.0)
+    assert float(jnp.max(jnp.abs(
+        lA.acked_base + resid - tA.bundle.pack(last)))) < 1e-4
 
 
 @given(shapes=shapes_st, frac=frac_st, seed=st.integers(0, 2**16))
