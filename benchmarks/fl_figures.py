@@ -262,6 +262,87 @@ def fig_dlink_bandwidth_sweep(smoke: bool = False):
     return {k: v for k, v in derived.items() if k.endswith("/summary")}
 
 
+# --- hierarchical topology sweep (ROADMAP multi-server item, ISSUE 5) ------
+
+# server<->server link bandwidth tiers: the root's links divided by the
+# tier factor — a datacenter backbone, a metro edge uplink, and a starved
+# fog link where the hierarchy's compressed push path has to carry it
+TOPOLOGY_TIERS = {"backbone/1": 1.0, "edge/40": 40.0, "starved/400": 400.0}
+TOPOLOGY_LEAVES = (1, 2, 4)
+BASE_SERVER_BW = 200e6          # bytes/s before the tier divisor
+
+
+def fig_topology_sweep(smoke: bool = False):
+    """Hierarchical federation sweep: 1 root x {1,2,4} leaf servers x
+    server-link bandwidth tiers, compressed worker AND server links.
+
+    1 leaf runs the passthrough identity topology (== the single-server
+    baseline); multi-leaf runs split the same worker set round-robin into
+    disjoint pools and re-aggregate through the root (sync leaf-push,
+    delta-codec'd server links).  Emits
+    ``benchmarks/results/BENCH_topology.json``; ``smoke=True`` is the CI
+    entry: 1 tier x {1,2} leaves, few rounds, same artifact shape.
+    """
+    tiers = {"edge/40": 40.0} if smoke else TOPOLOGY_TIERS
+    leaves = (1, 2) if smoke else TOPOLOGY_LEAVES
+    max_rounds = 4 if smoke else 120
+    target = None if smoke else 0.8
+
+    def _run(n_leaves, div):
+        setup = make_setup([1] * 12, seed=0, noise=0.2, batch_size=64,
+                           het="strong")
+        h = run_fl(setup, mode="sync", selector="all",
+                   epochs_per_round=EP, max_rounds=max_rounds,
+                   transport="topk_ef+int8", transport_frac=0.1,
+                   target_accuracy=target,
+                   topology="1x1" if n_leaves == 1 else n_leaves,
+                   topology_kw=None if n_leaves == 1 else dict(
+                       push="sync", server_codec="topk_ef+int8",
+                       server_frac=0.1,
+                       server_bandwidth=BASE_SERVER_BW / div))
+        curve = [(p.time, p.accuracy, p.up_bytes, p.down_bytes) for p in h]
+        return curve, {
+            "t80": time_to_accuracy(h, 0.8),
+            "final_accuracy": h[-1].accuracy,
+            "root_versions": h[-1].version,
+            # 1 leaf: worker-link bytes (the baseline's whole wire);
+            # multi-leaf: exactly the server<->server payload bytes
+            "up_bytes": h[-1].up_bytes,
+            "down_bytes": h[-1].down_bytes,
+        }
+
+    curves, derived = {}, {}
+    # the 1-leaf passthrough baseline has no server<->server wire, so the
+    # tier divisor cannot affect it: run once, reference it per tier
+    base_curve, base_derived = (_run(1, 1.0) if 1 in leaves
+                                else (None, None))
+    for tier, div in tiers.items():
+        for n_leaves in leaves:
+            name = f"{tier}/leaves{n_leaves}"
+            if n_leaves == 1:
+                curves[name], derived[name] = base_curve, base_derived
+            else:
+                curves[name], derived[name] = _run(n_leaves, div)
+    for tier in tiers:
+        one = derived[f"{tier}/leaves1"]
+        rows = {n: derived[f"{tier}/leaves{n}"] for n in leaves if n > 1}
+        derived[f"{tier}/summary"] = {
+            "t80_leaves1": one["t80"],
+            "t80_by_leaves": {n: r["t80"] for n, r in rows.items()},
+            "server_wire_bytes_by_leaves": {
+                n: r["up_bytes"] + r["down_bytes"] for n, r in rows.items()},
+        }
+    rec = {"config": {"tiers": dict(tiers), "leaves": list(leaves),
+                      "smoke": smoke, "frac": 0.1,
+                      "epochs_per_round": EP,
+                      "base_server_bandwidth": BASE_SERVER_BW},
+           "curves": curves, "derived": derived}
+    BENCH_RESULTS.mkdir(parents=True, exist_ok=True)
+    (BENCH_RESULTS / "BENCH_topology.json").write_text(
+        json.dumps(rec, indent=2))
+    return {k: v for k, v in derived.items() if k.endswith("/summary")}
+
+
 ALL = {
     "fig4_1_sequential_vs_fl": fig4_1_sequential_vs_fl,
     "fig4_2_even_vs_uneven": fig4_2_even_vs_uneven,
@@ -273,11 +354,14 @@ ALL = {
     "table5_1_time_to_accuracy": table5_1_time_to_accuracy,
     "fig_30workers": fig30_workers,
     "fig_dlink_bandwidth_sweep": fig_dlink_bandwidth_sweep,
+    "fig_topology_sweep": fig_topology_sweep,
 }
 
 
 if __name__ == "__main__":
     # CI smoke entry point: tiny downlink sweep -> BENCH_dlink.json
+    # (one entry point per smoke flag: --smoke-topology lives in
+    # benchmarks/run.py)
     if "--smoke-dlink" in sys.argv:
         print(json.dumps(fig_dlink_bandwidth_sweep(smoke=True), indent=2))
     else:

@@ -7,11 +7,23 @@ import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+# the `benchmarks` package itself (namespace pkg, no __init__.py): direct
+# `python benchmarks/run.py` invocations need the repo root importable too
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 
 def main() -> None:
     from benchmarks import agg_bench, agg_shard_bench, fl_figures, \
         roofline, wire_bench
+
+    # CI smoke dispatch: run exactly one tiny sweep and exit (the full
+    # table below is the local/nightly path).  One entry point per flag:
+    # --smoke-dlink lives in fl_figures.py's __main__, --smoke-topology
+    # here
+    if "--smoke-topology" in sys.argv:
+        print(json.dumps(fl_figures.fig_topology_sweep(smoke=True),
+                         indent=2))
+        return
 
     agg_bench.main()
     print()

@@ -108,6 +108,18 @@ UPDATE_WEIGHT_FNS = {
 }
 
 
+def use_flat_vec(flat, transport, aggregator: str) -> bool:
+    """True when decoded payloads can land straight in the flat (W, N)
+    row buffer: the merge fast path is active, the transport resolves to
+    the SAME (mesh-aware) bundle (else decoded vectors would not match
+    the row buffer's padded width), and the aggregator has a scalar-
+    weight form.  Shared by the single-server and topology-root merge
+    paths — the invariants must never desynchronize between tiers."""
+    return (flat is not None and transport.flat_capable
+            and transport.bundle is flat.bundle
+            and aggregator in UPDATE_WEIGHT_FNS)
+
+
 def update_weights(aggregator: str, updates: List[WorkerUpdate]):
     """Scalar merge weight per update, or None if ``aggregator`` has no
     scalar-weight form (then the caller must use AGGREGATORS)."""

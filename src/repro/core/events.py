@@ -38,6 +38,14 @@ class EventLoop:
     def at(self, time: float, fn: Callable, *args) -> None:
         self.schedule(max(0.0, time - self.now), fn, *args)
 
+    def call_soon(self, fn: Callable, *args) -> None:
+        """Run ``fn`` at the current simulated time, but AFTER the call
+        stack and any already-queued events at this timestamp (ties break
+        by sequence number).  The topology layer uses this to settle
+        same-instant leaf events — e.g. a leaf finishing and pushing in
+        the same aggregate — before acting on their combined state."""
+        self.schedule(0.0, fn, *args)
+
     def stop(self) -> None:
         self._stopped = True
 

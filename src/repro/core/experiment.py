@@ -141,7 +141,9 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
            async_latest_table: bool = True, transport: str = "raw",
            transport_down: Optional[str] = None,
            transport_frac: float = 0.1,
-           server_mesh: Optional[int] = None) -> List[HistoryPoint]:
+           server_mesh: Optional[int] = None,
+           topology=None,
+           topology_kw: Optional[dict] = None) -> List[HistoryPoint]:
     """One end-to-end FL run; returns the server's HistoryPoint sequence.
 
     ``mode``/``selector``/``aggregator`` pick the thesis §2-3 machinery;
@@ -156,7 +158,36 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
     larger meshes match within the reduction-order LSB tolerance
     documented in ROADMAP.md (CPU runs need
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+
+    ``topology`` turns on hierarchical multi-server federation
+    (``core.topology``): ``"1xL"`` / an int picks one root over ``L``
+    leaf servers, each driving a disjoint worker pool (round-robin split
+    of the setup's workers, or explicit ``pools`` in ``topology_kw``) and
+    pushing codec'd flat-buffer deltas up a server<->server link to the
+    root's fused re-merge; the returned history is the ROOT's (global
+    model accuracy over time, byte counters = the server<->server
+    payloads).  ``topology_kw`` overrides :class:`TopologyConfig` fields
+    (``push`` sync/async, ``push_every``, ``server_codec``,
+    ``server_bandwidth``, ``root_alpha``...).  ``topology="1x1"`` is the
+    passthrough identity: the root is colocated with its only leaf and
+    the run is bit-identical to the single-server path (pinned by the
+    ``*_flat1x1`` golden aliases).  ``mode``/``max_rounds``/selection
+    apply per leaf; ``target_accuracy`` is checked on the global model.
     """
+    if topology is not None:
+        from .topology import parse_topology, run_fl_topology
+        res = run_fl_topology(
+            setup, topology=parse_topology(topology, **(topology_kw or {})),
+            mode=mode, selector=selector, aggregator=aggregator,
+            epochs_per_round=epochs_per_round, max_rounds=max_rounds,
+            target_accuracy=target_accuracy, selector_kw=selector_kw,
+            server_freq=server_freq, async_alpha=async_alpha,
+            async_stale_pow=async_stale_pow,
+            async_min_updates=async_min_updates, async_delta=async_delta,
+            async_latest_table=async_latest_table, transport=transport,
+            transport_down=transport_down, transport_frac=transport_frac,
+            server_mesh=server_mesh)
+        return res.root_history
     loop = EventLoop()
     est = TimeEstimator(server_freq=server_freq,
                         t_onebatch_server=setup.per_batch_server)

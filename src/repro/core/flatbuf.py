@@ -39,6 +39,7 @@ tests/test_agg_sharded.py).
 from __future__ import annotations
 
 import functools
+import os
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
@@ -318,6 +319,18 @@ def normalized_weights(weights: Sequence[float]) -> np.ndarray:
     if s <= 0:
         raise ValueError("aggregation weights sum to zero")
     return (w / s).astype(np.float32)
+
+
+def flat_state_for(weights, mesh=None) -> Optional["FlatServerState"]:
+    """The flat-buffer merge fast path for an aggregator over ``weights``,
+    or None when it doesn't apply (non-array weight trees, or
+    ``REPRO_AGG_PATH=tree`` forcing the per-leaf reference end to end).
+    One predicate shared by every merge owner — the single-server
+    ``AggregationServer`` and the topology root — so the fallback rules
+    can never drift apart between tiers."""
+    if packable(weights) and os.environ.get("REPRO_AGG_PATH") != "tree":
+        return FlatServerState(weights, mesh=mesh)
+    return None
 
 
 class FlatServerState:

@@ -136,6 +136,21 @@ class TimeBasedSelector(Selector):
         self._last_acc = accuracy
 
 
+def make_pool_selectors(kind: str, estimators: Sequence[TimeEstimator],
+                        bytes_specs: Sequence[BytesSpec],
+                        **kw) -> List[Selector]:
+    """One independently-stateful selector per leaf worker pool (multi-
+    server topologies, core/topology.py).  Every policy except ``all`` is
+    stateful — rmin/rmax feedback, the eq-3.3 time budget — so pools must
+    never share an instance: each leaf's budget evolves with its OWN
+    accuracy trajectory and its own pool's estimator, exactly as a
+    single-server run's would."""
+    if len(estimators) != len(bytes_specs):
+        raise ValueError("one estimator and bytes-spec per pool")
+    return [make_selector(kind, est, bs, **kw)
+            for est, bs in zip(estimators, bytes_specs)]
+
+
 def make_selector(kind: str, estimator: TimeEstimator,
                   model_bytes: BytesSpec, **kw) -> Selector:
     if kind == "all":

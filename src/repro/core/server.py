@@ -12,7 +12,6 @@ re-dispatched — fast workers never wait for slow ones (§2.2.2.4 point 3).
 """
 from __future__ import annotations
 
-import os
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -50,9 +49,10 @@ class AggregationServer:
                  async_min_updates: int = 1, async_delta: bool = False,
                  async_latest_table: bool = True,
                  transport="raw", transport_down: Optional[str] = None,
-                 mesh=None):
+                 mesh=None, name: str = "aggregator"):
         assert mode in ("sync", "async")
-        self.address = "server://aggregator"
+        self.name = name
+        self.address = f"server://{name}"
         self.weights = weights
         # 1-D aggregation-server mesh (parallel.sharding.agg_mesh): the
         # packed merge substrate and every link's flat vectors shard along
@@ -90,10 +90,7 @@ class AggregationServer:
         # (W, N) update rows; falls back to the pytree AGGREGATORS wrapper
         # for non-array weight trees, unknown aggregator names, or when
         # REPRO_AGG_PATH=tree forces the per-leaf reference end to end
-        self._flat: Optional[flatbuf.FlatServerState] = None
-        if (flatbuf.packable(weights)
-                and os.environ.get("REPRO_AGG_PATH") != "tree"):
-            self._flat = flatbuf.FlatServerState(weights, mesh=mesh)
+        self._flat = flatbuf.flat_state_for(weights, mesh=mesh)
         # single weight-exchange path: every transfer is a codec'd Payload
         # with exact wire bytes (core/transport.py); transport_down names
         # the downlink codec (None = symmetric with the uplink)
@@ -105,15 +102,22 @@ class AggregationServer:
         self.transport = transport
         self.total_up_bytes = 0
         self.total_down_bytes = 0
-        # decode straight into packed flat rows when the merge fast path is
-        # active AND the aggregator has a scalar-weight form (otherwise the
-        # pytree AGGREGATORS fallback needs trees in the cache); the
-        # transport must resolve to the same (mesh-aware) bundle or its
-        # decoded vectors would not match the row buffer's padded width
-        self._use_vec = (self._flat is not None
-                         and self.transport.flat_capable
-                         and self.transport.bundle is self._flat.bundle
-                         and aggregator in agg.UPDATE_WEIGHT_FNS)
+        # decode straight into packed flat rows when the merge fast path
+        # is active AND the aggregator has a scalar-weight form (otherwise
+        # the pytree AGGREGATORS fallback needs trees in the cache)
+        self._use_vec = agg.use_flat_vec(self._flat, self.transport,
+                                         aggregator)
+
+        # hierarchical topology (core/topology.py): when set, this server is
+        # a LEAF under a root aggregator — _finish defers the loop-stop
+        # decision to the orchestrator, every aggregate is reported upward
+        # (the leaf-push hook), and hold()/release() gate dispatch while a
+        # pushed model's global replacement is in flight
+        self.topology_hook = None
+        self._hold = False
+        self._held: List[str] = []          # async workers parked while held
+        self._pending_dispatch = False      # sync round deferred while held
+        self._started = False               # start() called (mid-run joins)
 
         self.workers: Dict[str, FLWorker] = {}
         self.warehouse = DataWarehouse()
@@ -128,17 +132,41 @@ class AggregationServer:
 
     # --- relationship (thesis §3.3.1) ---
     def add_worker(self, worker: FLWorker):
+        joined_mid_run = (self._started and self.mode == "async"
+                          and worker.worker_id not in self.workers
+                          and not self.done)
         self.workers[worker.worker_id] = worker
         worker.add_server(self.pointer)
+        if joined_mid_run:
+            # async servers dispatch per-response, so a worker joining a
+            # RUNNING async server (elastic join / topology re-attach) has
+            # no response of its own to trigger on — kick its first
+            # instruction now (sync servers pick it up at the next
+            # round's selection instead)
+            if self._hold:
+                self._held.append(worker.worker_id)
+            else:
+                self._send_train(worker.worker_id, self.version)
 
     def remove_worker(self, worker_id: str):
-        self.workers.pop(worker_id, None)
+        w = self.workers.pop(worker_id, None)
+        if w is not None:
+            # a departing worker's in-flight transfers are cancelled and
+            # its ACL entry revoked: once the server forgets the worker,
+            # a late response could never be redeemed (_on_response can't
+            # reach the departed worker's warehouse), so letting it
+            # deliver would leak the one-time ticket plus a model-sized
+            # payload forever — and a still-training instruction must not
+            # issue a ticket to a server that will never redeem it
+            w.cancel_inflight(self.pointer)
+            w.remove_server(self.pointer)
 
     def profiles(self) -> List[WorkerProfile]:
         return [w.profile for w in self.workers.values()]
 
     # --- main loop ---
     def start(self):
+        self._started = True
         self._dispatch_round()
 
     def _accuracy(self) -> float:
@@ -146,10 +174,51 @@ class AggregationServer:
 
     def _finish(self):
         self.done = True
-        self.loop.stop()
+        if self.topology_hook is not None:
+            self.topology_hook.on_leaf_done(self)
+        else:
+            self.loop.stop()
+
+    # --- leaf role under a root aggregator (core/topology.py) ---
+    def hold(self):
+        """Topology gate: freeze new dispatches — a leaf push is in flight
+        and the root's global replacement hasn't been installed yet."""
+        self._hold = True
+
+    def release(self):
+        """Re-open dispatch after :meth:`install_global`: re-run a sync
+        round deferred while held, re-dispatch async workers parked in
+        ``_held``."""
+        if not self._hold:
+            return
+        self._hold = False
+        if self.done:
+            self._held.clear()
+            return
+        held, self._held = self._held, []
+        for wid in held:
+            if wid in self.workers:
+                self._send_train(wid, self.version)
+        if self._pending_dispatch:
+            self._pending_dispatch = False
+            self._dispatch_round()
+
+    def install_global(self, weights) -> None:
+        """Replace this (leaf) server's model with the root's new global —
+        the downward leg of the hierarchy.  The pointer uid is stable so
+        workers' ACLs keep working; the leaf version is NOT bumped
+        (staleness is counted in leaf rounds, and sync's stale-discard
+        must not fire on an install that landed between rounds)."""
+        self.weights = weights
+        self.warehouse.put(weights, uid=self.pointer.uid)
 
     def _dispatch_round(self):
         if self.done:
+            return
+        if self._hold:
+            # held by the topology layer: remember that a round wants to
+            # open; release() re-enters once the new global is installed
+            self._pending_dispatch = True
             return
         if self.version >= self.max_rounds:
             self._finish()
@@ -279,7 +348,10 @@ class AggregationServer:
             else:
                 self._cache = []
             if not self.done:
-                self._send_train(res.worker_id, self.version)
+                if self._hold:
+                    self._held.append(res.worker_id)
+                else:
+                    self._send_train(res.worker_id, self.version)
         else:
             self._cache.append(agg.WorkerUpdate(weights=weights,
                                                 staleness=staleness,
@@ -350,6 +422,10 @@ class AggregationServer:
             self._finish()
         elif self.version >= self.max_rounds:
             self._finish()
+        if self.topology_hook is not None:
+            # leaf-push hook LAST: the orchestrator sees the appended
+            # history point (and, on the final round, the done flag)
+            self.topology_hook.on_leaf_aggregate(self)
 
 
 def run_sequential(*, weights, train_fn, eval_fn, data, per_batch_time: float,

@@ -90,6 +90,19 @@ CHAIN of in-flight encodes: a cancelled fetch unlinks its own record —
 reverting a peer's entry would double-count its deficit — so any
 interleaving of cancels and completions restores exact pre-encode values
 (property-tested in tests/test_wire_properties.py).
+
+Server<->server links.  The hierarchical topology layer
+(``core/topology.py``) reuses this registry unchanged for its leaf<->root
+channels: the ROOT aggregator owns a :class:`Transport` whose "workers"
+are leaf servers.  The codec table above applies verbatim with the roles
+re-cast — a leaf *push* is the uplink (delta vs ``tx_base``, the global
+model the leaf last installed; uplink EF residual per leaf link), a root
+*fan-out* is the downlink (delta vs ``acked_base``, the last global the
+root knows the leaf holds; raw first-contact provision, ack advanced at
+the leaf's fetch-complete, downlink EF = the encode output).  A leaf
+server dying mid-transfer takes the same restore paths a worker death
+does (``restore_uplink`` / ``restore_downlink``), so hierarchical fault
+accounting inherits the single-tier proofs.
 """
 from __future__ import annotations
 

@@ -64,6 +64,14 @@ class FLWorker:
     def accepts(self, server_pointer: Pointer) -> bool:
         return server_pointer in self.server_pointers
 
+    def remove_server(self, server_pointer: Pointer):
+        """Revoke a server's ACL entry (the server dropped this worker):
+        in-progress instructions from it die silently at their next
+        ``accepts`` check instead of responding to a registry that no
+        longer knows the worker."""
+        if server_pointer in self.server_pointers:
+            self.server_pointers.remove(server_pointer)
+
     def cancel_inflight(self, server_pointer: Pointer) -> None:
         """Cancel this server's in-flight transfers (its round closed).
         An unfinished *fetch* is dropped without advancing the downlink
@@ -164,7 +172,9 @@ class FLWorker:
         up_bytes = link.upfront_up_bytes()
         if up_bytes is not None:
             def _finish():
-                if self.profile.failed:      # died mid-training
+                # died mid-training, or the server dropped this worker
+                # (remove_server): a response would never be redeemed
+                if self.profile.failed or not self.accepts(server_pointer):
                     self.busy = False
                     return
                 up = link.encode_up(_train())
@@ -177,7 +187,8 @@ class FLWorker:
             return
 
         def _train_then_send():
-            if self.profile.failed:          # died mid-training
+            # died mid-training, or the server dropped this worker
+            if self.profile.failed or not self.accepts(server_pointer):
                 self.busy = False
                 return
             up = link.encode_up(_train())

@@ -54,3 +54,31 @@ class ElasticPool:
         def _leave():
             self.server.remove_worker(worker_id)
         self.loop.at(t, _leave)
+
+
+@dataclass
+class TopologyFaultInjector:
+    """Hierarchical fault schedule for a ``core.topology.Topology``: leaf
+    *servers* dying (their pool goes silent, in-flight server<->server
+    transfers roll back — see ``Topology.kill_leaf``) and their orphaned
+    workers re-attaching to a surviving leaf, FogBus2's
+    restart-the-container recovery story at the aggregation tier."""
+    topology: object       # core.topology.Topology
+
+    def kill_leaf_at(self, t: float, leaf_id: str):
+        self.topology.kill_leaf_at(t, leaf_id)
+
+    def reattach_workers_at(self, t: float, from_leaf: str, to_leaf: str):
+        """Move every worker of a (dead) leaf under a surviving leaf's
+        registry.  The topology-wide ``WorkerAckRegistry`` means the new
+        leaf's first dispatch to each worker is a delta against the
+        worker's actual acked base, not a raw re-send."""
+        topo = self.topology
+
+        def _reattach():
+            src = topo.leaves[from_leaf].server
+            dst = topo.leaves[to_leaf].server
+            for w in list(src.workers.values()):
+                src.remove_worker(w.worker_id)
+                dst.add_worker(w)
+        topo.loop.at(t, _reattach)

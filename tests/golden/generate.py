@@ -54,6 +54,18 @@ MESH1_ALIASES = {
                                server_mesh=1)),
 }
 
+# hierarchical topology (PR 5): the flat 1x1 topology (one root colocated
+# with one leaf, passthrough — no server<->server wire) must be
+# BIT-identical to the single-server path, so its goldens are again the
+# very same fixtures under the topology spelling of the pinned configs.
+TOPOLOGY_ALIASES = {
+    "raw_flat1x1": ("raw", dict(transport="raw", topology="1x1")),
+    "uplink_only_flat1x1": ("uplink_only",
+                            dict(transport="topk_ef+int8",
+                                 transport_down="raw", transport_frac=0.1,
+                                 topology="1x1")),
+}
+
 
 def history_record(h):
     return [{"time": p.time.hex(), "version": p.version,

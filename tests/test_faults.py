@@ -19,10 +19,13 @@ from repro.core.estimator import TimeEstimator, WorkerProfile
 from repro.core.events import EventLoop
 from repro.core.selection import make_selector
 from repro.core.server import AggregationServer
+from repro.core.topology import TopologyConfig, build_topology, \
+    run_fl_topology
 from repro.core.warehouse import Pointer
 from repro.core.worker import FLWorker
 from repro.parallel import sharding as psh
-from repro.runtime.faults import ElasticPool, FaultInjector
+from repro.runtime.faults import ElasticPool, FaultInjector, \
+    TopologyFaultInjector
 
 SETUP_KW = dict(seed=0, noise=0.25, batch_size=32, het="strong")
 
@@ -208,3 +211,217 @@ def test_elastic_join_and_leave_mid_training():
     for prev, cur in zip(h, h[1:]):  # counters stay cumulative/monotone
         assert cur.up_bytes >= prev.up_bytes
         assert cur.down_bytes >= prev.down_bytes
+
+
+# ---------------- hierarchical topology faults ----------------
+
+def test_leaf_death_mid_push_cancels_cleanly_and_workers_reattach():
+    """A leaf server dying with its push in flight: the root never counts
+    (or merges) the cancelled payload, the root's acked base for that
+    leaf never advances, and the dead pool's workers re-attach to a
+    surviving leaf via ElasticPool — where the shared WorkerAckRegistry
+    makes the new leaf's first dispatch a delta against each worker's
+    actual acked base, not a raw re-send."""
+    setup = _mini_setup(4)           # 2 pools: leaf0={w0,w2} leaf1={w1,w3}
+    state = {"pushes": 0, "killed": None, "arrived": [],
+             "acked_at_kill": None, "version_at_kill": None,
+             "reattach_codecs": []}
+    loop, topo = build_topology(
+        setup, topology=TopologyConfig(n_leaves=2, push="sync",
+                                       server_codec="topk_ef+int8",
+                                       server_frac=0.1),
+        mode="sync", epochs_per_round=2, max_rounds=6,
+        transport="topk_ef+int8", transport_frac=0.1)
+    lf0, lf1 = topo.leaves["leaf0"], topo.leaves["leaf1"]
+    pool = ElasticPool(loop, lf1.server)
+
+    # spy the surviving leaf's first dispatch to each re-attached worker
+    orig_link = lf1.server.transport.link
+
+    def spying_link(wid, _orig=orig_link):
+        l = _orig(wid)
+        if wid in ("w0", "w2") and not getattr(l, "_spied", False):
+            l._spied = True
+            orig_enc = l.encode_down
+
+            def enc(w, _o=orig_enc, _wid=wid):
+                p = _o(w)
+                state["reattach_codecs"].append((_wid, p.codec))
+                return p
+            l.encode_down = enc
+        return l
+    lf1.server.transport.link = spying_link
+
+    orig_start = topo._start_push
+
+    def start_push(lf):
+        orig_start(lf)
+        state["pushes"] += 1
+        if lf.lid == "leaf0" and state["killed"] is None \
+                and state["pushes"] > 2:
+            state["killed"] = lf.push_inflight          # in flight NOW
+            state["acked_at_kill"] = lf.link.acked_base
+            state["version_at_kill"] = topo.version
+            topo.kill_leaf("leaf0")
+            for w in list(lf.server.workers.values()):  # re-attach
+                pool.join_at(loop.now, w)
+    topo._start_push = start_push
+
+    orig_arrive = topo._push_arrive
+
+    def push_arrive(lf, payload, *args):
+        if lf.push_inflight is payload and not topo.done:
+            state["arrived"].append(payload.wire_bytes)
+        orig_arrive(lf, payload, *args)
+    topo._push_arrive = push_arrive
+
+    topo.start()
+    loop.run(max_events=200_000)
+    topo.finalize()
+
+    assert state["killed"] is not None, "kill never fired"
+    # the cancelled push was never counted or merged
+    assert topo.total_up_bytes == sum(state["arrived"])
+    assert "leaf0" not in topo._pending
+    # the root's acked base for the dead leaf never advanced past kill
+    assert lf0.link.acked_base is state["acked_at_kill"]
+    assert lf0.link._pending_down is None
+    assert lf0.push_inflight is None
+    # the root kept merging with the survivor after the death
+    assert topo.version > state["version_at_kill"]
+    assert topo.history[-1].up_bytes == topo.total_up_bytes
+    # re-attached workers were dispatched by the surviving leaf, and the
+    # shared acked-base chain made those dispatches deltas, not raw
+    codecs = dict(state["reattach_codecs"])
+    assert set(codecs) == {"w0", "w2"}
+    assert all(c == "topk_ef+int8" for c in codecs.values())
+    # ...and they actually contributed: some surviving-leaf round merged
+    # more workers than its original pool of 2
+    assert any(p.n_updates > 2 for p in lf1.server.history[1:])
+
+
+def test_reattach_mid_instruction_leaks_no_tickets():
+    """Moving a BUSY worker between leaves (TopologyFaultInjector
+    delegates to remove_worker + add_worker) must not strand its
+    in-flight instruction: remove_worker cancels the transfer and
+    revokes the ACL, so the worker never issues a ticket a departed
+    server can't redeem — no live ticket or model-sized payload may
+    survive in any worker warehouse after the run."""
+    setup = _mini_setup(4)
+    loop, topo = build_topology(
+        setup, topology=TopologyConfig(n_leaves=2, push="sync",
+                                       server_codec="topk_ef+int8",
+                                       server_frac=0.1),
+        mode="async", epochs_per_round=2, max_rounds=6,
+        transport="topk_ef+int8", transport_frac=0.1)
+    inj = TopologyFaultInjector(topo)
+    # mid-run (workers guaranteed busy in async mode; the whole run ends
+    # ~t=0.5): kill leaf0 and move its pool under leaf1 with
+    # instructions still in flight
+    inj.kill_leaf_at(0.2, "leaf0")
+    inj.reattach_workers_at(0.2, "leaf0", "leaf1")
+    topo.start()
+    loop.run(max_events=200_000)
+    topo.finalize()
+    for lf in topo.leaves.values():
+        for w in lf.server.workers.values():
+            assert not w.warehouse._tickets, \
+                f"{w.worker_id} leaked tickets {w.warehouse._tickets}"
+            assert not w.warehouse._meta, \
+                f"{w.worker_id} leaked stored payloads"
+    assert "w0" in topo.leaves["leaf1"].server.workers  # actually moved
+    assert not topo.leaves["leaf0"].server.workers
+    # moved workers were DISPATCHED by the async survivor (add_worker
+    # kicks mid-run async joins — they have no response to trigger on)
+    # and contributed: the latest-table merge grows past the native pool
+    assert max(p.n_updates
+               for p in topo.leaves["leaf1"].server.history) >= 3, \
+        "re-attached workers idled on the async survivor"
+
+
+def test_root_ef_revert_chain_under_interleaved_leaf_cancels():
+    """Concurrent root->leaf fan-outs with interleaved leaf deaths: each
+    cancelled encode unlinks its own revert-chain record — the survivor's
+    EF books close exactly (acked + residual == pack(global)) and every
+    cancelled link reverts to its precise pre-encode state."""
+    setup = _mini_setup(3)
+    loop, topo = build_topology(
+        setup, topology=TopologyConfig(n_leaves=3, push="sync",
+                                       server_codec="topk_ef+int8",
+                                       server_frac=0.1),
+        mode="sync", epochs_per_round=2, max_rounds=2)
+    A, B, C = (topo.leaves[f"leaf{i}"] for i in range(3))
+    for lf in (A, B, C):             # raw first contact -> acked bases
+        lf.link.complete_fetch(lf.link.encode_down(topo.weights))
+        lf.started = True            # fan arrivals must not start FL runs
+    # move the global so fan-outs carry a lossy top-k delta
+    topo.weights = jax.tree.map(
+        lambda x: x + 0.01 * jnp.arange(x.size, dtype=jnp.float32)
+        .reshape(x.shape), topo.weights)
+    res_before = {lf.lid: lf.link.down_residual for lf in (A, B, C)}
+    acked_before = {lf.lid: lf.link.acked_base for lf in (A, B, C)}
+    for lf in (A, B, C):
+        topo._fan_out(lf)
+    assert all(lf.fan_inflight is not None for lf in (A, B, C))
+    topo.kill_leaf("leaf0")          # A dies before its fetch lands
+    assert A.link.acked_base is acked_before["leaf0"]
+    assert A.link.down_residual is res_before["leaf0"]
+    assert A.link._pending_down is None
+    # C dies mid-flight too (halfway to its arrival), interleaved with
+    # B's completion; B's books must close regardless
+    t_c = C.fan_inflight.wire_bytes / C.bandwidth
+    loop.at(0.5 * t_c, topo.kill_leaf, "leaf2")
+    loop.run()                       # B's fetch arrives; A and C never do
+    assert C.fan_inflight is None and C.link._pending_down is None
+    target = topo.transport.bundle.pack(topo.weights)
+    resid = B.link.down_residual
+    resid = 0.0 if resid is None else resid
+    err = float(jnp.max(jnp.abs(B.link.acked_base + resid - target)))
+    assert err < 1e-4, f"survivor books do not close: {err}"
+    # dead leaves' ack state is frozen at its pre-encode value
+    assert A.link.acked_base is acked_before["leaf0"]
+    assert C.link.acked_base is acked_before["leaf2"]
+    assert C.link.down_residual is res_before["leaf2"]
+
+
+def test_leaf_death_mid_fan_out_never_advances_root_acked_base():
+    """Kill a leaf between the root's fan-out dispatch and its arrival:
+    the fetch never completes, the root's acked base and downlink EF for
+    that leaf revert exactly, and the surviving topology still drains."""
+    setup = _mini_setup(4)
+    killed = {}
+    loop, topo = build_topology(
+        setup, topology=TopologyConfig(n_leaves=2, push="sync",
+                                       server_codec="topk_ef+int8",
+                                       server_frac=0.1),
+        mode="sync", epochs_per_round=2, max_rounds=4,
+        transport="topk_ef+int8", transport_frac=0.1)
+    lf0 = topo.leaves["leaf0"]
+    inj = TopologyFaultInjector(topo)
+    orig_fan = topo._fan_out
+
+    def fan_out(lf):
+        # pre-encode link state: what a cancelled dispatch must revert to
+        acked, resid = lf.link.acked_base, lf.link.down_residual
+        orig_fan(lf)
+        # kill leaf0 with its SECOND fan-out (the first codec'd one) in
+        # flight: the injector fires at the current instant, after this
+        # stack but before the fetch arrives — mid-fetch by construction
+        if lf.lid == "leaf0" and lf.fan_inflight is not None \
+                and lf.fan_inflight.codec != "raw" and not killed:
+            killed["acked"] = acked
+            killed["resid"] = resid
+            inj.kill_leaf_at(loop.now, "leaf0")
+    topo._fan_out = fan_out
+    topo.start()
+    loop.run(max_events=200_000)
+    topo.finalize()
+    assert killed, "kill never fired"
+    assert lf0.link.acked_base is killed["acked"]
+    resid, before = lf0.link.down_residual, killed["resid"]
+    assert (resid is None and before is None) or \
+        bool(jnp.array_equal(resid, before))
+    assert lf0.link._pending_down is None and lf0.fan_inflight is None
+    # the survivor finished its local schedule and the run drained
+    assert topo.leaves["leaf1"].server.history[-1].version == 4
+    assert topo.history[-1].version == topo.version > 0

@@ -32,17 +32,20 @@ EP, ROUNDS, history_record = _gen.EP, _gen.ROUNDS, _gen.history_record
 # the PR-3 spellings of the pinned PR-2 configs: transport_down="raw"
 # reproduces the era when only the uplink was codec'd.  The PR-4 mesh1
 # aliases (generate.MESH1_ALIASES) run the SAME configs on a 1-device
-# server mesh and are pinned float-hex-identical to the same fixtures:
-# sharding the substrate must not move a single bit.
+# server mesh, and the PR-5 flat-topology aliases
+# (generate.TOPOLOGY_ALIASES) run them through the hierarchical
+# orchestration layer as a 1-root/1-leaf passthrough — all pinned
+# float-hex-identical to the same fixtures: neither sharding the
+# substrate nor wrapping the server in a topology may move a single bit.
 TRANSPORTS = {
     "raw": dict(transport="raw"),
     "uplink_only": dict(transport="topk_ef+int8", transport_down="raw",
                         transport_frac=0.1),
 }
-TRANSPORTS.update({alias: kw for alias, (_, kw)
-                   in _gen.MESH1_ALIASES.items()})
-_FIXTURE_OF = {alias: base for alias, (base, _)
-               in _gen.MESH1_ALIASES.items()}
+_ALIASES = dict(_gen.MESH1_ALIASES)
+_ALIASES.update(_gen.TOPOLOGY_ALIASES)
+TRANSPORTS.update({alias: kw for alias, (_, kw) in _ALIASES.items()})
+_FIXTURE_OF = {alias: base for alias, (base, _) in _ALIASES.items()}
 
 CASES = [(t, m) for t in TRANSPORTS for m in MODES]
 

@@ -1,0 +1,417 @@
+"""Cross-topology parity tier for the hierarchical federation layer
+(``core/topology.py``).
+
+Invariants pinned here:
+
+  * the flat ``1x1`` topology (one root colocated with one leaf,
+    passthrough) is BIT-identical to the single-server path across
+    sync / async / async_delta / time_based — same histories, float-hex
+    exact (the golden fixtures additionally pin this in
+    tests/test_golden_histories.py);
+  * in 2- and 4-leaf topologies the root-merged history's byte counters
+    equal the SUM of the server<->server payloads' exact ``wire_bytes``
+    (uplink counted at arrival, downlink at dispatch);
+  * sync leaf-push barriers (one root merge per cycle, every alive leaf
+    contributing) vs async leaf-push (one merge per arriving push, the
+    fast leaf never waiting on the slow one) order exactly as specified;
+  * the sharded substrate composes: a topology over ``server_mesh`` is
+    bit-identical to the same topology unsharded (CPU: the codec and the
+    merge both take the XLA path at any mesh size).
+"""
+import importlib.util
+from pathlib import Path
+
+import jax
+import pytest
+from conftest import hist_rec
+
+from repro.core import TABLE_4_1, make_setup, run_fl
+from repro.core.topology import (TopologyConfig, parse_topology,
+                                 run_fl_topology)
+
+SETUP_KW = dict(seed=0, noise=0.25, batch_size=32, het="strong")
+EP, ROUNDS = 3, 4
+
+# the golden generator owns the pinned mode configs; reuse them so this
+# tier and the fixture tier can never drift apart
+_GEN = Path(__file__).resolve().parent / "golden" / "generate.py"
+_spec = importlib.util.spec_from_file_location("golden_generate", _GEN)
+_gen = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(_gen)
+MODES = _gen.MODES
+
+
+def _spied_links(topo, up_spy, down_spy):
+    """Record every server<->server payload's exact wire bytes."""
+    for lf in topo.leaves.values():
+        link = lf.link
+
+        def eu(w, _o=link.encode_up):
+            p = _o(w)
+            up_spy.append(p.wire_bytes)
+            return p
+
+        def ed(w, _o=link.encode_down):
+            p = _o(w)
+            down_spy.append(p.wire_bytes)
+            return p
+        link.encode_up, link.encode_down = eu, ed
+
+
+# ---------------- flat 1x1: the identity topology ----------------
+
+@pytest.mark.parametrize("mname", list(MODES))
+def test_flat_1x1_bit_identical_to_single_server(mname):
+    single = run_fl(make_setup(TABLE_4_1["mnist_even"], **SETUP_KW),
+                    epochs_per_round=EP, max_rounds=ROUNDS, **MODES[mname])
+    flat = run_fl(make_setup(TABLE_4_1["mnist_even"], **SETUP_KW),
+                  epochs_per_round=EP, max_rounds=ROUNDS, topology="1x1",
+                  **MODES[mname])
+    assert hist_rec(flat) == hist_rec(single)
+
+
+def test_flat_1x1_compressed_transport_bit_identical():
+    kw = dict(transport="topk_ef+int8", transport_frac=0.1, mode="sync",
+              selector="all")
+    single = run_fl(make_setup(TABLE_4_1["mnist_even"], **SETUP_KW),
+                    epochs_per_round=EP, max_rounds=ROUNDS, **kw)
+    flat = run_fl(make_setup(TABLE_4_1["mnist_even"], **SETUP_KW),
+                  epochs_per_round=EP, max_rounds=ROUNDS, topology="1x1",
+                  **kw)
+    assert hist_rec(flat) == hist_rec(single)
+
+
+def test_flat_1x1_root_mirrors_leaf_verbatim():
+    res = run_fl_topology(make_setup(TABLE_4_1["mnist_even"], **SETUP_KW),
+                          topology="1x1", mode="sync", epochs_per_round=EP,
+                          max_rounds=ROUNDS)
+    (leaf_hist,) = res.leaf_histories.values()
+    assert hist_rec(res.root_history) == hist_rec(leaf_hist)
+    assert res.config.passthrough and res.topology.transport is None
+
+
+def test_parse_topology_specs():
+    assert parse_topology("1x1").passthrough
+    assert parse_topology("1x4").n_leaves == 4
+    assert not parse_topology("1x4").passthrough
+    assert parse_topology(2).n_leaves == 2
+    cfg = parse_topology("1x2", push="async", server_bandwidth=1e6)
+    assert cfg.push == "async" and cfg.server_bandwidth == 1e6
+    with pytest.raises(ValueError):
+        parse_topology("2x4")        # only 1-root topologies
+    with pytest.raises(ValueError):
+        parse_topology(TopologyConfig(n_leaves=2, passthrough=True))
+    with pytest.raises(ValueError):
+        parse_topology("1x2", push="bogus")
+
+
+# ---------------- multi-leaf: exact wire accounting ----------------
+
+@pytest.mark.parametrize("push", ["sync", "async"])
+@pytest.mark.parametrize("n_leaves", [2, 4])
+def test_root_byte_counters_equal_sum_of_leaf_payload_bytes(n_leaves, push):
+    """HistoryPoint counters at the root == the sum of the exact
+    ``wire_bytes`` of every server<->server payload, both directions,
+    for codec'd leaf<->root links."""
+    up_spy, down_spy = [], []
+    setup = make_setup(TABLE_4_1["mnist_even"], **SETUP_KW)
+    res = run_fl_topology(
+        setup, topology=TopologyConfig(n_leaves=n_leaves, push=push,
+                                       server_codec="topk_ef+int8",
+                                       server_frac=0.1),
+        mode="sync", epochs_per_round=EP, max_rounds=3,
+        transport="topk_ef+int8", transport_frac=0.1,
+        on_build=lambda t: _spied_links(t, up_spy, down_spy))
+    h = res.root_history
+    topo = res.topology
+    assert h[-1].up_bytes == sum(up_spy) == topo.total_up_bytes
+    assert h[-1].down_bytes == sum(down_spy) == topo.total_down_bytes
+    for prev, cur in zip(h, h[1:]):
+        assert cur.up_bytes >= prev.up_bytes
+        assert cur.down_bytes >= prev.down_bytes
+        assert cur.time >= prev.time
+    # the first root->leaf contact per leaf is the raw full-model
+    # provision; steady-state fan-outs are codec'd (strictly smaller)
+    assert len(down_spy) > n_leaves
+    raw = setup.model_bytes
+    assert all(b == raw for b in down_spy[:n_leaves])
+    assert all(b < raw for b in down_spy[n_leaves:])
+    # leaf pools are disjoint and cover the worker set
+    pools = [set(lf.server.workers) for lf in topo.leaves.values()]
+    assert sum(len(p) for p in pools) == len(setup.profiles)
+    assert set.union(*pools) == {p.worker_id for p in setup.profiles}
+
+
+def test_leaf_local_counters_stay_worker_scoped():
+    """Server<->server bytes live ONLY in the root history; each leaf's
+    own HistoryPoint counters keep counting exactly its worker-pool
+    payloads (the single-server contract, now per pool)."""
+    setup = make_setup(TABLE_4_1["mnist_even"], **SETUP_KW)
+    res = run_fl_topology(setup, topology=2, mode="sync",
+                          epochs_per_round=EP, max_rounds=3,
+                          transport="topk_ef+int8", transport_frac=0.1)
+    for lid, lf in res.topology.leaves.items():
+        lh = res.leaf_histories[lid]
+        assert lh[-1].up_bytes == lf.server.total_up_bytes
+        assert lh[-1].down_bytes == lf.server.total_down_bytes
+        # a pool of 5 workers ships less than the 10-worker single-server
+        # run would; nonzero because every worker exchanged payloads
+        assert 0 < lh[-1].up_bytes < 10 * setup.model_bytes
+
+
+# ---------------- sync vs async leaf-push orderings ----------------
+
+def _uneven_pools_setup():
+    """2 pools with deliberately unequal speeds: pool 0 gets the fast
+    (tier-0) workers, pool 1 the medium+slow ones."""
+    setup = make_setup([1] * 6, **SETUP_KW)
+    fast = [i for i in range(6) if i % 3 == 0]
+    rest = [i for i in range(6) if i % 3 != 0]
+    return setup, [fast, rest]
+
+
+def test_sync_push_barriers_one_merge_per_cycle():
+    setup, pools = _uneven_pools_setup()
+    res = run_fl_topology(
+        setup, topology=TopologyConfig(n_leaves=2, push="sync", pools=pools),
+        mode="sync", epochs_per_round=EP, max_rounds=3)
+    h = res.root_history
+    # every root merge saw BOTH leaves (the barrier), once per cycle
+    assert [p.n_updates for p in h[1:]] == [2, 2, 2]
+    assert h[-1].version == 3
+
+
+def test_async_push_fast_leaf_never_waits():
+    setup, pools = _uneven_pools_setup()
+    sync_res = run_fl_topology(
+        setup, topology=TopologyConfig(n_leaves=2, push="sync", pools=pools),
+        mode="sync", epochs_per_round=EP, max_rounds=3)
+    async_res = run_fl_topology(
+        setup, topology=TopologyConfig(n_leaves=2, push="async", pools=pools),
+        mode="sync", epochs_per_round=EP, max_rounds=3)
+    hs, ha = sync_res.root_history, async_res.root_history
+    # async: one merge per arriving push — twice the versions, all singles
+    assert all(p.n_updates == 1 for p in ha[1:])
+    assert ha[-1].version == 2 * hs[-1].version
+    # the fast pool's first push merges BEFORE the sync barrier could
+    # have (the barrier waits on the slow pool's first push)
+    assert ha[1].time < hs[1].time
+    # both modes drain cleanly: every leaf ran its full local schedule
+    for res in (sync_res, async_res):
+        for lh in res.leaf_histories.values():
+            assert lh[-1].version == 3
+
+
+def test_async_push_staleness_damps_alpha():
+    """The async root merge is staleness-damped: a push based on an old
+    global must move the global less than a fresh one (root_alpha scaled
+    by (1+s)^-root_stale_pow)."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.events import EventLoop
+    from repro.core.topology import Topology
+
+    weights = {"w": jnp.arange(8.0)}
+    loop = EventLoop()
+    topo = Topology(weights=weights, loop=loop, eval_fn=lambda w: 0.0,
+                    model_bytes=32,
+                    config=TopologyConfig(n_leaves=2, push="async",
+                                          server_codec="delta",
+                                          root_alpha=0.5,
+                                          root_stale_pow=1.0))
+    n = topo.transport.bundle.n_params          # ignore the padded tail
+    base = topo.transport.bundle.pack(weights)[:n]
+    contrib = base + 1.0
+    pad = jnp.zeros((topo.transport.bundle.padded_size - n,), jnp.float32)
+    # fresh push (staleness 0): alpha = 0.5
+    topo._pending = {"leafX": (jnp.concatenate([contrib, pad]), 0, 1, None)}
+    topo._merge()
+    fresh = topo.transport.bundle.pack(topo.weights)[:n]
+    np.testing.assert_allclose(np.asarray(fresh - base), 0.5, atol=1e-6)
+    # stale push (base version 0, root now at 1): alpha = 0.5 / 2
+    topo._pending = {"leafY": (jnp.concatenate([contrib + 1.0, pad]),
+                               0, 1, None)}
+    topo._merge()
+    stale = topo.transport.bundle.pack(topo.weights)[:n]
+    np.testing.assert_allclose(np.asarray(stale - fresh),
+                               0.25 * np.asarray(contrib + 1.0 - fresh),
+                               atol=1e-5)
+
+
+def test_install_preserves_hold_window_progress():
+    """Async leaves keep merging worker responses between their push and
+    the fan-out's arrival (hold parks only re-dispatch).  The install
+    must carry that in-window progress onto the new global —
+    ``global + (leaf_now - pushed_snapshot)`` — not clobber it; when
+    nothing merged since the push, the install is an exact replace."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.topology import build_topology
+
+    setup = make_setup([1] * 2, **SETUP_KW)
+    loop, topo = build_topology(
+        setup, topology=TopologyConfig(n_leaves=2, push="sync",
+                                       server_codec="delta"),  # lossless
+        mode="async", epochs_per_round=EP, max_rounds=4)
+    lf = topo.leaves["leaf0"]
+    lf.link.complete_fetch(lf.link.encode_down(topo.weights))
+    lf.started = True
+    s = lf.server
+    # the global merged this snapshot; the leaf then merged more updates
+    lf.merged_base = s.weights
+    s.weights = jax.tree.map(lambda x: x + 1.0, s.weights)
+    topo.weights = jax.tree.map(lambda x: x + 2.0, topo.weights)
+    topo._fan_out(lf)
+    loop.run()
+    want = jax.tree.map(lambda x: x + 1.0, topo.weights)
+    got = s.weights
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+              zip(jax.tree.leaves(got), jax.tree.leaves(want)))
+    assert err < 1e-5, f"hold-window progress lost: {err}"
+    # idle install (nothing merged past the snapshot): exact replace
+    lf.merged_base = s.weights
+    topo.weights = jax.tree.map(lambda x: x + 1.0, topo.weights)
+    topo._fan_out(lf)
+    loop.run()
+    assert all(bool(jnp.all(a == b)) for a, b in
+               zip(jax.tree.leaves(lf.server.weights),
+                   jax.tree.leaves(topo.weights)))
+
+
+def test_done_leaf_flushes_window_banked_behind_inflight_push():
+    """A leaf that finishes while its push is still in flight, having
+    aggregated more since: the banked window must flush when the
+    in-flight push lands (done leaves get no fan-out, so nothing else
+    would ever re-trigger a push) — no worker update may silently miss
+    the root at shutdown."""
+    from repro.core.topology import build_topology
+
+    setup = make_setup([1] * 4, **SETUP_KW)
+    loop, topo = build_topology(
+        setup, topology=TopologyConfig(n_leaves=2, push="async",
+                                       server_codec="delta"),
+        mode="async", epochs_per_round=EP, max_rounds=4)
+    lf = topo.leaves["leaf0"]
+    lf.link.complete_fetch(lf.link.encode_down(topo.weights))
+    lf.started = True
+    p1 = lf.link.encode_up(lf.server.weights)
+    lf.push_inflight = p1
+    lf.server.done = True            # finished with the push in flight
+    lf.agg_since_push = 2            # ...and a banked window behind it
+    lf.n_data_since_push = 2
+    topo._push_arrive(lf, p1, 0, 1, lf.server.weights)
+    assert lf.push_inflight is not None, "final window never flushed"
+    assert lf.agg_since_push == 0
+    loop.run()                       # the flush lands and merges too
+    assert topo.version == 2
+
+
+def test_inflight_fan_rebases_on_its_pinned_snapshot():
+    """A fan-out in flight when a NEWER push merges (moving
+    lf.merged_base) must still rebase the install on the snapshot pinned
+    at ITS dispatch: the delivered global does not contain the newer
+    window, so rebasing on the newer snapshot would subtract progress
+    the global never held."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.topology import build_topology
+
+    setup = make_setup([1] * 4, **SETUP_KW)
+    loop, topo = build_topology(
+        setup, topology=TopologyConfig(n_leaves=2, push="async",
+                                       server_codec="delta"),  # lossless
+        mode="async", epochs_per_round=EP, max_rounds=4)
+    lf = topo.leaves["leaf0"]
+    lf.link.complete_fetch(lf.link.encode_down(topo.weights))
+    lf.started = True
+    s = lf.server
+    snap1 = s.weights
+    lf.merged_base = snap1
+    topo.weights = jax.tree.map(lambda x: x + 2.0, snap1)   # global v1
+    v1 = topo.weights
+    topo._fan_out(lf)                # F1 pinned to snap1
+    # while F1 is in flight: the leaf advances and a newer push merges,
+    # moving merged_base past the window F1's global contains
+    s.weights = jax.tree.map(lambda x: x + 1.0, snap1)      # snap2
+    lf.merged_base = s.weights
+    loop.run()                       # F1 arrives
+    want = jax.tree.map(lambda x: x + 1.0, v1)  # v1 + (snap2 - snap1)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+              zip(jax.tree.leaves(s.weights), jax.tree.leaves(want)))
+    assert err < 1e-5, f"in-flight fan used the wrong rebase snapshot: {err}"
+
+
+def test_repushed_pending_entry_accumulates_n_data():
+    """A second push landing before the sync barrier merges the first
+    (async-mode leaves keep aggregating while held) supersedes the
+    contribution but must ACCUMULATE its n_data merge weight — the newer
+    snapshot embodies both windows' worker updates."""
+    from repro.core.topology import build_topology
+
+    setup = make_setup([1] * 4, **SETUP_KW)
+    loop, topo = build_topology(
+        setup, topology=TopologyConfig(n_leaves=2, push="sync",
+                                       server_codec="delta"),
+        mode="async", epochs_per_round=EP, max_rounds=4)
+    lf = topo.leaves["leaf0"]
+    lf.link.complete_fetch(lf.link.encode_down(topo.weights))
+    lf.started = True
+    # two pushes arrive while the barrier still waits on leaf1
+    p1 = lf.link.encode_up(topo.weights)
+    lf.push_inflight = p1
+    topo._push_arrive(lf, p1, 0, 10, topo.weights)
+    assert topo._pending["leaf0"][2] == 10
+    p2 = lf.link.encode_up(topo.weights)
+    lf.push_inflight = p2
+    topo._push_arrive(lf, p2, 0, 1, topo.weights)
+    assert topo._pending["leaf0"][2] == 11, "merge weight lost on re-push"
+    assert topo.version == 0            # barrier still open (no merge)
+
+
+def test_async_leaves_take_delta_install_path_end_to_end():
+    """In a real async-leaf run the hold window is routinely non-empty:
+    the delta-install branch must actually fire, and the run drains."""
+    calls = []
+
+    def spy_delta_installs(topo):
+        # async_delta is off, so each leaf's _flat.apply_delta is
+        # reachable ONLY from the topology's delta-install branch
+        for lf in topo.leaves.values():
+            orig = lf.server._flat.apply_delta
+
+            def ad(cur, new, base, _o=orig):
+                calls.append(1)
+                return _o(cur, new, base)
+            lf.server._flat.apply_delta = ad
+
+    # a slow server link stretches the push->fan round trip past the
+    # workers' response spacing, so merges land inside the hold window
+    res = run_fl_topology(
+        make_setup([1] * 6, **SETUP_KW),
+        topology=TopologyConfig(n_leaves=2, push="async",
+                                server_bandwidth=2e5),
+        mode="async", epochs_per_round=EP, max_rounds=4,
+        on_build=spy_delta_installs)
+    assert calls, "delta-install branch never fired"
+    for lh in res.leaf_histories.values():
+        assert lh[-1].version == 4
+
+
+# ---------------- sharded substrate composition ----------------
+
+def test_topology_on_server_mesh_bit_identical_to_unsharded():
+    if jax.device_count() < 2:
+        pytest.skip("needs >=2 devices — run with REPRO_HOST_DEVICES=4")
+    setup = make_setup(TABLE_4_1["mnist_even"], **SETUP_KW)
+    plain = run_fl_topology(setup, topology=2, mode="sync",
+                            epochs_per_round=EP, max_rounds=3,
+                            transport="topk_ef+int8", transport_frac=0.1)
+    setup2 = make_setup(TABLE_4_1["mnist_even"], **SETUP_KW)
+    sharded = run_fl_topology(setup2, topology=2, mode="sync",
+                              epochs_per_round=EP, max_rounds=3,
+                              transport="topk_ef+int8", transport_frac=0.1,
+                              server_mesh=2)
+    assert hist_rec(sharded.root_history) == hist_rec(plain.root_history)
+    for lid in plain.leaf_histories:
+        assert hist_rec(sharded.leaf_histories[lid]) == \
+            hist_rec(plain.leaf_histories[lid])

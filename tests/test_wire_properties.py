@@ -291,6 +291,68 @@ def test_shared_acked_base_never_double_counts_on_cancel(
         lA.acked_base + resid - tA.bundle.pack(last)))) < 1e-4
 
 
+# ---------------- server<->server links (hierarchical topology) ----------------
+
+@pytest.mark.parametrize("codec", ["delta", "int8", "topk_ef",
+                                   "topk_ef+int8"])
+@given(shapes=shapes_st, frac=frac_st, seed=st.integers(0, 2**16),
+       n_leaves=st.integers(1, 4))
+@settings(deadline=None, max_examples=10)
+def test_leaf_to_root_push_conserves_mass_any_leaf_count(codec, shapes,
+                                                         frac, seed,
+                                                         n_leaves):
+    """The leaf->root delta path (core/topology.py): one root Transport,
+    one codec'd link per leaf.  For ANY leaf count and top-k fraction,
+    each leaf's push round-trips with exact wire bytes and EF mass
+    conservation, and the per-link EF residuals are fully isolated — a
+    peer leaf's encode never perturbs another's books."""
+    base = _tree(shapes, seed)
+    t = transport.Transport(base, codec=codec, frac=frac)
+    spec = transport.CODECS[codec]
+    n = t.bundle.n_params
+    links = [t.link(f"leaf{i}") for i in range(n_leaves)]
+    for l in links:                 # root's first-contact provision (raw)
+        l.complete_fetch(l.encode_down(base))
+    for rnd in range(2):            # residuals feed round 2's books
+        for i, l in enumerate(links):
+            model = _tree(shapes, seed + 7 * i + rnd + 1, scale=0.5)
+            delta = t.bundle.pack(model) - l.tx_base
+            x = delta if l.residual is None else delta + l.residual
+            peers = [(p.residual, p.acked_base)
+                     for p in links if p is not l]
+            up = l.encode_up(model)
+            assert up.wire_bytes == _expected_wire(spec, x, n, frac,
+                                                   t.raw_bytes)
+            got = l.decode_up_vec(up)
+            _mass_check(got - l.tx_base, l.residual, x, spec)
+            # cross-leaf isolation: every peer's books are untouched
+            assert peers == [(p.residual, p.acked_base)
+                             for p in links if p is not l]
+
+
+@given(shapes=shapes_st, frac=frac_st, seed=st.integers(0, 2**16),
+       n_leaves=st.integers(2, 4))
+@settings(deadline=None, max_examples=10)
+def test_root_fan_out_books_close_per_leaf(shapes, frac, seed, n_leaves):
+    """Root->leaf fan-outs of the SAME global to every leaf: each link's
+    downlink EF books close independently (acked + residual ==
+    pack(global)), even though the encodes share one packed global."""
+    base = _tree(shapes, seed)
+    t = transport.Transport(base, codec="topk_ef+int8", frac=frac)
+    links = [t.link(f"leaf{i}") for i in range(n_leaves)]
+    for l in links:
+        l.complete_fetch(l.encode_down(base))
+    for rnd in range(2):
+        model = _tree(shapes, seed + rnd + 1, scale=0.5)
+        target = t.bundle.pack(model)
+        for l in links:             # one shared global, n encodes
+            l.complete_fetch(l.encode_down(model))
+        for l in links:
+            resid = 0.0 if l.down_residual is None else l.down_residual
+            err = float(jnp.max(jnp.abs(l.acked_base + resid - target)))
+            assert err < 1e-4
+
+
 @given(shapes=shapes_st, frac=frac_st, seed=st.integers(0, 2**16))
 @settings(deadline=None, max_examples=10)
 def test_cancelled_downlink_conserves_future_mass(shapes, frac, seed):
