@@ -343,6 +343,106 @@ def fig_topology_sweep(smoke: bool = False):
     return {k: v for k, v in derived.items() if k.endswith("/summary")}
 
 
+# --- chaos sweep (ROADMAP fault-tolerance item, ISSUE 6) -------------------
+
+# per-link drop probability tiers for the lossy-channel sweep; duplicates
+# arrive at half the drop rate on top
+CHAOS_LOSS_RATES = (0.0, 0.05, 0.1, 0.2)
+CHAOS_SEED = 123
+
+
+def fig_chaos_sweep(smoke: bool = False):
+    """Fault-tolerance cost sweep: time-to-80% vs link loss rate, with
+    the root killed mid-run, failover on vs off.
+
+    Every cell is a 1x2 hierarchical federation (sync push, compressed
+    worker AND server links) whose every link rides the seeded lossy
+    channel (drop ``p``, duplicate ``p/2``, retransmit with backoff); the
+    root dies right after its second global merge.  With failover the
+    senior leaf is promoted and resumes delta dispatch, so t80 should
+    degrade only by the retransmit tax; without it the run ends at the
+    kill.  Each run is closed by the chaos auditor before it is recorded.
+    Emits ``benchmarks/results/BENCH_chaos.json``; ``smoke=True`` is the
+    CI entry: {0, 10%} loss, few rounds, same artifact shape.
+    """
+    from repro.core.topology import parse_topology, run_fl_topology
+    from repro.runtime.faults import ChaosSchedule, audit_chaos_run
+
+    rates = (0.0, 0.1) if smoke else CHAOS_LOSS_RATES
+    max_rounds = 6 if smoke else 120
+    target = None if smoke else 0.8
+    kill_after = 1 if smoke else 2   # root dies after this global version
+
+    def _run(drop_p, failover):
+        setup = make_setup([1] * 12, seed=0, noise=0.2, batch_size=64,
+                           het="strong")
+        sched = ChaosSchedule(seed=CHAOS_SEED, drop_p=drop_p,
+                              dup_p=drop_p / 2, n_worker_kills=0)
+
+        def on_build(topo):
+            sched.apply(topo)        # lossy channel + ledger on every tier
+            orig = topo._merge
+
+            def merge_then_kill():
+                orig()
+                if topo.version == kill_after and not topo.done:
+                    topo.loop.schedule(1e-3, topo.kill_root)
+            topo._merge = merge_then_kill
+
+        res = run_fl_topology(
+            setup,
+            topology=parse_topology("1x2", push="sync",
+                                    server_codec="topk_ef+int8",
+                                    server_frac=0.1,
+                                    server_bandwidth=BASE_SERVER_BW / 40,
+                                    root_failover=failover),
+            mode="sync", selector="all", epochs_per_round=EP,
+            max_rounds=max_rounds, target_accuracy=target,
+            transport="topk_ef+int8", transport_frac=0.1,
+            on_build=on_build)
+        stats = audit_chaos_run(res.topology)   # books must close
+        h = res.root_history
+        curve = [(p.time, p.accuracy, p.retransmits) for p in h]
+        return curve, {
+            "t80": time_to_accuracy(h, 0.8),
+            "final_accuracy": h[-1].accuracy,
+            "root_versions": h[-1].version,
+            "failovers": stats["failovers"],
+            "retransmits": stats["retransmits"],
+            "up_bytes": h[-1].up_bytes,
+            "down_bytes": h[-1].down_bytes,
+        }
+
+    curves, derived = {}, {}
+    for drop_p in rates:
+        for failover in (True, False):
+            name = f"loss{drop_p:g}/failover_{'on' if failover else 'off'}"
+            curves[name], derived[name] = _run(drop_p, failover)
+    base = derived[f"loss{rates[0]:g}/failover_on"]["t80"]
+    lossy = derived.get("loss0.1/failover_on", {}).get("t80")
+    derived["summary"] = {
+        "t80_lossfree_failover_on": base,
+        "t80_by_rate_failover_on": {
+            f"{r:g}": derived[f"loss{r:g}/failover_on"]["t80"]
+            for r in rates},
+        "t80_by_rate_failover_off": {
+            f"{r:g}": derived[f"loss{r:g}/failover_off"]["t80"]
+            for r in rates},
+        # acceptance: t80 under 10% loss within 25% of loss-free
+        "t80_ratio_10pct_vs_lossfree": (
+            lossy / base if base and lossy else None),
+    }
+    rec = {"config": {"loss_rates": list(rates), "smoke": smoke,
+                      "seed": CHAOS_SEED, "kill_root_after": kill_after,
+                      "topology": "1x2", "frac": 0.1,
+                      "epochs_per_round": EP,
+                      "server_bandwidth": BASE_SERVER_BW / 40},
+           "curves": curves, "derived": derived}
+    BENCH_RESULTS.mkdir(parents=True, exist_ok=True)
+    (BENCH_RESULTS / "BENCH_chaos.json").write_text(json.dumps(rec, indent=2))
+    return derived["summary"]
+
+
 ALL = {
     "fig4_1_sequential_vs_fl": fig4_1_sequential_vs_fl,
     "fig4_2_even_vs_uneven": fig4_2_even_vs_uneven,
@@ -355,6 +455,7 @@ ALL = {
     "fig_30workers": fig30_workers,
     "fig_dlink_bandwidth_sweep": fig_dlink_bandwidth_sweep,
     "fig_topology_sweep": fig_topology_sweep,
+    "fig_chaos_sweep": fig_chaos_sweep,
 }
 
 

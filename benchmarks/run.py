@@ -19,9 +19,13 @@ def main() -> None:
     # CI smoke dispatch: run exactly one tiny sweep and exit (the full
     # table below is the local/nightly path).  One entry point per flag:
     # --smoke-dlink lives in fl_figures.py's __main__, --smoke-topology
-    # here
+    # and --smoke-chaos here
     if "--smoke-topology" in sys.argv:
         print(json.dumps(fl_figures.fig_topology_sweep(smoke=True),
+                         indent=2))
+        return
+    if "--smoke-chaos" in sys.argv:
+        print(json.dumps(fl_figures.fig_chaos_sweep(smoke=True),
                          indent=2))
         return
 

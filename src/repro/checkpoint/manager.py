@@ -11,6 +11,7 @@ import os
 import pickle
 import tempfile
 import time
+import warnings
 from pathlib import Path
 from typing import Any, Optional, Tuple
 
@@ -62,7 +63,15 @@ class CheckpointManager:
         return payload["step"], payload["state"], payload["metadata"]
 
     def restore_latest(self) -> Optional[Tuple[int, Any, dict]]:
-        steps = self.steps()
-        if not steps:
-            return None
-        return self.restore(steps[-1])
+        """Resume from the newest *readable* step: a corrupt or truncated
+        snapshot (a crash on a filesystem without atomic rename, a partial
+        copy) is skipped with a warning instead of aborting the restore —
+        the fault-tolerance contract is "newest COMPLETE step", not
+        "newest file"."""
+        for step in reversed(self.steps()):
+            try:
+                return self.restore(step)
+            except Exception as e:
+                warnings.warn(f"skipping unreadable checkpoint step {step} "
+                              f"({self._path(step).name}): {e!r}")
+        return None

@@ -30,6 +30,10 @@ class EventLoop:
         self._seq = itertools.count()
         self.now = 0.0
         self._stopped = False
+        # True iff the last run() returned because max_events was hit
+        # with work still queued — the run is TRUNCATED, not complete,
+        # and callers must not treat the history as valid
+        self.exhausted = False
 
     def schedule(self, delay: float, fn: Callable, *args) -> None:
         assert delay >= 0, delay
@@ -51,6 +55,7 @@ class EventLoop:
 
     def run(self, until: Optional[float] = None, max_events: int = 10_000_000):
         n = 0
+        self.exhausted = False
         while self._q and not self._stopped and n < max_events:
             ev = heapq.heappop(self._q)
             if until is not None and ev.time > until:
@@ -59,4 +64,6 @@ class EventLoop:
             self.now = ev.time
             ev.fn(*ev.args)
             n += 1
+        self.exhausted = bool(self._q) and not self._stopped \
+            and n >= max_events
         return self.now

@@ -217,6 +217,12 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
         server.add_worker(w)
     server.start()
     loop.run(max_events=200_000)
+    if loop.exhausted:
+        raise RuntimeError(
+            "event loop exhausted max_events=200000 with work still "
+            "queued — the run did not complete and the history would be "
+            "silently truncated; shrink the run (fewer rounds/workers) "
+            "or raise max_events")
     return server.history
 
 

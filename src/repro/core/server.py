@@ -36,6 +36,8 @@ class HistoryPoint:
     selected: int
     up_bytes: int = 0        # cumulative worker->server wire bytes so far
     down_bytes: int = 0      # cumulative server->worker wire bytes so far
+    retransmits: int = 0     # cumulative lossy-link retransmit count so far
+                             # (copies, not bytes — never in up/down_bytes)
 
 
 class AggregationServer:
@@ -232,7 +234,8 @@ class AggregationServer:
             self.selector.on_round_end(acc)
             self.history.append(HistoryPoint(self.loop.now, self.version, acc,
                                              0, 0, self.total_up_bytes,
-                                             self.total_down_bytes))
+                                             self.total_down_bytes,
+                                             self.transport.total_retransmits))
             self.version += 1
             self.loop.schedule(1e-3, self._dispatch_round)
             return
@@ -417,7 +420,8 @@ class AggregationServer:
         self.selector.on_round_end(acc)
         self.history.append(HistoryPoint(self.loop.now, self.version, acc,
                                          n_upd, n_upd, self.total_up_bytes,
-                                         self.total_down_bytes))
+                                         self.total_down_bytes,
+                                         self.transport.total_retransmits))
         if self.target_accuracy is not None and acc >= self.target_accuracy:
             self._finish()
         elif self.version >= self.max_rounds:

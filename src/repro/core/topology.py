@@ -48,6 +48,24 @@ given worker encode downlink deltas against the worker's actual acked
 base, so a worker re-attached to a surviving leaf after its server died
 (``ElasticPool``) keeps its acked-base chain — the new leaf's first
 dispatch is a delta, not a raw re-send.
+
+Root failover.  The same registry trick makes the ROOT elastic
+(``TopologyConfig.root_failover``, on by default): the root's transport
+keeps its per-leaf downlink ack state in a topology-owned
+:class:`~repro.core.transport.WorkerAckRegistry`, so when the root dies
+(:meth:`Topology.kill_root`) the most senior surviving leaf (attach
+order) is promoted in place — its current model becomes the global,
+every surviving leaf re-parents its server<->server link to the promoted
+root's fresh transport, and because the registry survived, the promoted
+root's first dispatch to each leaf is a *delta* against that leaf's
+actual acked global — no raw re-sync storm.  In-flight pushes and
+fan-outs to the dead root roll back exactly like :meth:`kill_leaf`'s
+death path (uplink EF credited back, downlink revert chain unlinked),
+and arrived-but-unmerged pushes die with the root's memory — each leaf's
+next push re-ships its absolute state as a delta against its still-held
+``tx_base``, so no update mass is lost.  Root version, history, and byte
+counters continue across the promotion: the root is a *role*, not a
+process.
 """
 from __future__ import annotations
 
@@ -84,6 +102,8 @@ class TopologyConfig:
     root_rounds: Optional[int] = None   # cap on global versions
     pools: Optional[Sequence[Sequence[int]]] = None  # worker idx per leaf
     passthrough: bool = False     # 1x1 identity: root colocated, no wire
+    root_failover: bool = True    # root death promotes the senior leaf
+                                  # (False: root death ends the run)
 
     def __post_init__(self):
         if self.push not in ("sync", "async"):
@@ -176,11 +196,16 @@ class Topology:
         self.weights = weights
         self.version = 0
         self.mesh = mesh
+        self.model_bytes = model_bytes
         self.target_accuracy = target_accuracy
         self.total_up_bytes = 0
         self.total_down_bytes = 0
         self.leaves: Dict[str, _Leaf] = {}
         self.done = False
+        self.failovers = 0
+        # (leaf_id, payload codec, had-acked-base) per first post-failover
+        # dispatch — the chaos auditor's delta-not-raw-resume evidence
+        self.failover_dispatches: List[tuple] = []
         # leaf_id -> (decoded contribution, base root version, n_data,
         # leaf snapshot): pushes that arrived but have not merged yet
         # (the sync barrier)
@@ -189,13 +214,21 @@ class Topology:
                        else (0.5 if config.push == "async" else 1.0))
         if config.passthrough:
             self.transport = None
+            self._server_acks = None
             self._flat = None
             self._use_vec = False
         else:
+            # the per-leaf downlink ack state lives in a topology-owned
+            # registry, NOT inside the transport: it must survive the root
+            # transport being rebuilt on failover, so the promoted root's
+            # first dispatch to each leaf is a delta against the global
+            # the leaf actually holds
+            self._server_acks = transport_mod.WorkerAckRegistry()
             self.transport = transport_mod.Transport(
                 weights, codec=config.server_codec,
                 down_codec=config.server_codec_down,
-                frac=config.server_frac, raw_bytes=model_bytes, mesh=mesh)
+                frac=config.server_frac, raw_bytes=model_bytes, mesh=mesh,
+                ack_registry=self._server_acks)
             # same fast-path/fallback rules as the leaf servers, shared
             # helpers so the tiers can never drift apart
             self._flat = flatbuf.flat_state_for(weights, mesh=mesh)
@@ -241,7 +274,8 @@ class Topology:
             (lf,) = self.leaves.values()
             self.history = [HistoryPoint(p.time, p.version, p.accuracy,
                                          p.n_updates, p.selected,
-                                         p.up_bytes, p.down_bytes)
+                                         p.up_bytes, p.down_bytes,
+                                         p.retransmits)
                             for p in lf.server.history]
             self.weights = lf.server.weights
             self.version = lf.server.version
@@ -292,9 +326,11 @@ class Topology:
         lf.agg_since_push = 0
         lf.n_data_since_push = 0
         lf.push_inflight = payload
-        self.loop.schedule(payload.wire_bytes / max(lf.bandwidth, 1.0),
-                           self._push_arrive, lf, payload, base_rv, n_data,
-                           snap)
+        transport_mod.transmit(
+            self.loop, lf.link, payload,
+            payload.wire_bytes / max(lf.bandwidth, 1.0),
+            lambda: self._push_arrive(lf, payload, base_rv, n_data, snap),
+            direction="up")
 
     def _push_arrive(self, lf: _Leaf, payload, base_rv: int, n_data: int,
                      snap):
@@ -373,7 +409,8 @@ class Topology:
         self.history.append(HistoryPoint(self.loop.now, self.version, acc,
                                          len(ups), alive,
                                          self.total_up_bytes,
-                                         self.total_down_bytes))
+                                         self.total_down_bytes,
+                                         self.transport.total_retransmits))
         if ((self.target_accuracy is not None
              and acc >= self.target_accuracy)
                 or (self.cfg.root_rounds is not None
@@ -397,9 +434,12 @@ class Topology:
         # move lf.merged_base) while this fan is in flight, but THIS
         # global only contains the snapshot merged so far — rebasing the
         # install on the newer one would subtract progress it never held
-        self.loop.schedule(payload.wire_bytes / max(lf.bandwidth, 1.0),
-                           self._fan_arrive, lf, payload, self.version,
-                           lf.merged_base)
+        v_enc, base = self.version, lf.merged_base
+        transport_mod.transmit(
+            self.loop, lf.link, payload,
+            payload.wire_bytes / max(lf.bandwidth, 1.0),
+            lambda: self._fan_arrive(lf, payload, v_enc, base),
+            direction="down")
 
     def _fan_arrive(self, lf: _Leaf, payload, v_enc: int, base=None):
         if lf.fan_inflight is not payload:
@@ -411,6 +451,9 @@ class Topology:
             lf.link.restore_downlink(payload)
             self._check_done()
             return
+        if self.transport.audit is not None:
+            # chaos ledger: this leaf now holds the version-v_enc global
+            self.transport.audit.note_fetch(lf.lid, v_enc)
         tree = lf.link.complete_fetch(payload)
         server = lf.server
         if base is not None and server.weights is not base:
@@ -463,6 +506,96 @@ class Topology:
 
     def kill_leaf_at(self, t: float, leaf_id: str):
         self.loop.at(t, self.kill_leaf, leaf_id)
+
+    def kill_root(self):
+        """The ROOT aggregator dies.  Every in-flight server<->server
+        transfer rolls back exactly like :meth:`kill_leaf`'s death path —
+        a push mid-flight never reaches (or is counted by) a root, its
+        encoded mass returns to the uplink EF residual; a fan-out
+        mid-flight never advances the leaf's acked base (downlink revert
+        chain).  Pushes that arrived but had not merged died with the
+        root's memory — no mass is lost: each leaf's next push re-ships
+        its absolute state as a delta against its still-held ``tx_base``.
+        With ``root_failover`` the most senior surviving leaf is promoted
+        in place (:meth:`_promote_root`); without it the run ends."""
+        if self.cfg.passthrough:
+            raise ValueError("passthrough topology has no separate root")
+        if self.done:
+            return
+        # the dead process's retransmit timers die with it: in-flight
+        # copies may still arrive (and be discarded by the inflight
+        # guards below), but nothing re-sends on its behalf
+        self.transport.closed = True
+        for lf in self.leaves.values():
+            if lf.push_inflight is not None:
+                lf.link.restore_uplink(lf.push_inflight)
+                lf.push_inflight = None
+            if lf.fan_inflight is not None:
+                lf.link.restore_downlink(lf.fan_inflight)
+                lf.fan_inflight = None
+        self._pending.clear()
+        if not self.cfg.root_failover:
+            self._finish_all()
+            return
+        survivors = [lf for lf in self.leaves.values() if not lf.dead]
+        if not survivors:
+            self._check_done()
+            return
+        self._promote_root(survivors[0])
+
+    # effectively-infinite: the promoted root is colocated with its leaf,
+    # so their transfers cross process memory, not a wire
+    _LOOPBACK_BW = 1e18
+
+    def _promote_root(self, promoted: _Leaf):
+        """Seniority election (attach order) + re-parenting.  The promoted
+        leaf's current model becomes the global — the freshest state the
+        new root can serve.  The root transport is rebuilt around it, but
+        the per-leaf ack registry (and so every leaf's ``acked_base``
+        chain) survives, which is what makes the first post-failover
+        dispatch to each survivor a DELTA, not a raw re-sync storm.  Root
+        version, history, and byte/retransmit counters carry over: the
+        root is a role, and the role continues."""
+        self.failovers += 1
+        old = self.transport
+        self.weights = promoted.server.weights
+        tr = transport_mod.Transport(
+            self.weights, codec=self.cfg.server_codec,
+            down_codec=self.cfg.server_codec_down,
+            frac=self.cfg.server_frac, raw_bytes=self.model_bytes,
+            mesh=self.mesh, ack_registry=self._server_acks)
+        # same physical links, same lossy channel, one continuous ledger
+        tr.reliability = old.reliability
+        tr.rel_estimator = old.rel_estimator
+        tr.total_retransmits = old.total_retransmits
+        tr.audit = old.audit
+        self.transport = tr
+        self._use_vec = agg.use_flat_vec(self._flat, tr,
+                                         self.cfg.root_aggregator)
+        for lf in self.leaves.values():
+            if lf.dead:
+                continue
+            lf.link = tr.link(lf.lid)
+            # the dead root's memory of unmerged in-window progress is
+            # gone; the first post-failover install is an exact replace
+            lf.merged_base = None
+            if lf is promoted:
+                lf.bandwidth = self._LOOPBACK_BW
+                lf.link.reliability = None    # loopbacks don't drop
+        # immediately re-provision every survivor (held leaves mid-push or
+        # mid-fetch at the death resume at this fan's arrival; it also
+        # re-establishes each link's tx_base before any new push can cut
+        # a delta against the new root)
+        for lf in self.leaves.values():
+            if not lf.dead and not lf.server.done:
+                had_base = lf.link.acked_base is not None
+                self._fan_out(lf)
+                self.failover_dispatches.append(
+                    (lf.lid, lf.fan_inflight.codec, had_base))
+        self._check_done()
+
+    def kill_root_at(self, t: float):
+        self.loop.at(t, self.kill_root)
 
     def _finish_all(self):
         self.done = True
@@ -581,6 +714,12 @@ def run_fl_topology(setup, *, topology,
         on_build(topo)
     topo.start()
     loop.run(max_events=max_events)
+    if loop.exhausted:
+        raise RuntimeError(
+            f"event loop exhausted max_events={max_events} with work "
+            "still queued — the run did not complete and the histories "
+            "would be silently truncated; shrink the run or raise "
+            "max_events")
     topo.finalize()
     return TopologyResult(
         root_history=topo.history,

@@ -22,18 +22,18 @@ elsewhere), never a per-leaf tree-map — and every payload travels in a
 Codec table (n = logical parameter count, k = max(1, int(n * frac)),
 kept = entries actually surviving the top-k threshold):
 
-  ============== ==================================== =================== ==================
-  codec          uplink payload (base = fetched       downlink payload    wire_bytes
-                 model, ``tx_base``)                  (base = last-acked
-                                                      state)
-  ============== ==================================== =================== ==================
-  raw            full weights at native dtypes        full weights        sum(leaf nbytes)
-  delta          f32 delta (new - base)               f32 delta           4 * n
-  int8           int8-quantised delta + 1 f32 scale   same, vs acked base n + 4
-  topk_ef        top-k sparsified delta w/ EF         same, vs acked base ceil(n/8) + 4*kept
-  topk_ef+int8   top-k + int8 on the kept values      same, vs acked base ceil(n/8) + 4
-                                                                            + kept
-  ============== ==================================== =================== ==================
+  ============== ============================== =================== ================== ===============
+  codec          uplink payload (base =         downlink payload    wire_bytes         retransmit copy
+                 fetched model, ``tx_base``)    (base = last-acked                     (lossy links)
+                                                state)
+  ============== ============================== =================== ================== ===============
+  raw            full weights at native dtypes  full weights        sum(leaf nbytes)   byte-identical
+  delta          f32 delta (new - base)         f32 delta           4 * n              byte-identical
+  int8           int8 delta + 1 f32 scale       same, vs acked base n + 4              byte-identical
+  topk_ef        top-k delta w/ EF              same, vs acked base ceil(n/8) + 4*kept byte-identical
+  topk_ef+int8   top-k + int8 on kept values    same, vs acked base ceil(n/8) + 4      byte-identical
+                                                                      + kept
+  ============== ============================== =================== ================== ===============
 
 (The bitmap term ``ceil(n/8)`` is the kept-coordinate indicator; quantised
 codecs add one 4-byte per-update scale; payload values cost ``kept *
@@ -103,12 +103,35 @@ the leaf's fetch-complete, downlink EF = the encode output).  A leaf
 server dying mid-transfer takes the same restore paths a worker death
 does (``restore_uplink`` / ``restore_downlink``), so hierarchical fault
 accounting inherits the single-tier proofs.
+
+Unreliable links.  Attaching a :class:`LinkReliability` to a transport
+(``runtime/faults.py`` injects one per tier) routes every transfer
+through :func:`transmit` — a seeded, deterministic lossy channel with a
+retransmit protocol.  Each logical payload gets a per-link sequence
+number; each transmitted copy independently drops (``drop_p``) or
+duplicates (``dup_p``); the receiver dedups by sequence number, so a
+duplicate or a late retransmitted copy is discarded BEFORE it touches
+decode state, EF residuals, or byte counters; the sender re-sends on an
+ack timeout with exponential backoff, priced off the estimator's
+measured bandwidth (``Transport.rel_estimator``) when one is bound, the
+actual transmit time otherwise.  A retransmit re-sends the SAME
+:class:`Payload` object — byte-identical, never re-encoded — so the EF
+books are debited exactly once per logical payload no matter the loss
+schedule, and the acked-base invariants above hold bit-exactly
+(property-tested in tests/test_wire_properties.py).  Retransmits are
+counted on ``Transport.total_retransmits`` (surfaced per history point
+as ``HistoryPoint.retransmits``), never in ``up_bytes``/``down_bytes``:
+the byte counters remain "delivered payload bytes", which is what the
+chaos auditor closes the ledger against.  With ``reliability=None``
+(the default) :func:`transmit` degenerates to a single scheduled
+delivery event — bit-identical event order to the loss-free simulation.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+import zlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -339,6 +362,164 @@ class WorkerAckRegistry:
         return st
 
 
+@dataclass(frozen=True)
+class LinkReliability:
+    """Seeded per-link loss model + retransmit policy.
+
+    Each transmitted copy of a payload independently never arrives with
+    probability ``drop_p`` and is delivered twice (the duplicate arriving
+    late, at ``dup_delay * t_tx``) with probability ``dup_p``.  The sender
+    retransmits the SAME payload object after ``timeout_mult`` times the
+    estimated one-way time, backing off by ``backoff`` per attempt, up to
+    ``max_attempts`` total copies.  All randomness comes from a
+    per-(link, seed) ``RandomState``, so a given (topology, schedule,
+    seed) triple replays bit-exactly."""
+    drop_p: float = 0.0
+    dup_p: float = 0.0
+    seed: int = 0
+    timeout_mult: float = 3.0
+    backoff: float = 2.0
+    max_attempts: int = 64
+    dup_delay: float = 2.0
+
+
+@dataclass
+class TransportAudit:
+    """Delivery ledger for one transport's lossy links — the raw material
+    the chaos auditor (``runtime/faults.audit_chaos_run``) closes the
+    books against.  Only :func:`transmit` writes it (so it sees exactly
+    the wire), plus the fetch log noted by receivers at fetch time.
+
+    ``sent_bytes[dir]`` counts ORIGINAL sends only (attempt 0);
+    retransmitted copies land in ``retx_count``/``retx_bytes``; a
+    deduplicated (second/late) arrival lands in ``dup_count`` and nowhere
+    else.  Since servers count up/down bytes per delivered-and-accepted
+    payload, the closing inequalities are
+    ``counted_up <= delivered_bytes["up"]`` and
+    ``sent_bytes["down"] <= counted_down`` per transport."""
+    sent_bytes: Dict[str, int] = field(
+        default_factory=lambda: {"up": 0, "down": 0})
+    sent_count: Dict[str, int] = field(
+        default_factory=lambda: {"up": 0, "down": 0})
+    delivered_bytes: Dict[str, int] = field(
+        default_factory=lambda: {"up": 0, "down": 0})
+    delivered_count: Dict[str, int] = field(
+        default_factory=lambda: {"up": 0, "down": 0})
+    dup_count: Dict[str, int] = field(
+        default_factory=lambda: {"up": 0, "down": 0})
+    retx_count: int = 0
+    retx_bytes: int = 0
+    # receiver-side fetch log: worker/leaf id -> model versions fetched,
+    # in fetch-completion order (the monotone-version invariant's input)
+    fetch_versions: Dict[str, List[int]] = field(default_factory=dict)
+
+    def note_sent(self, direction: str, nbytes: int, retransmit: bool):
+        if retransmit:
+            self.retx_count += 1
+            self.retx_bytes += nbytes
+        else:
+            self.sent_bytes[direction] += nbytes
+            self.sent_count[direction] += 1
+
+    def note_delivered(self, direction: str, nbytes: int):
+        self.delivered_bytes[direction] += nbytes
+        self.delivered_count[direction] += 1
+
+    def note_dup(self, direction: str):
+        self.dup_count[direction] += 1
+
+    def note_fetch(self, worker_id: str, version: int):
+        self.fetch_versions.setdefault(worker_id, []).append(version)
+
+
+class _Channel:
+    """Per-link lossy-channel state: the seeded RNG, the per-payload
+    sequence counter, and the receiver's delivered-set (never pruned, so
+    arbitrarily late duplicates still dedup)."""
+
+    __slots__ = ("rng", "_seq", "delivered")
+
+    def __init__(self, seed: int):
+        self.rng = np.random.RandomState(seed & 0xFFFFFFFF)
+        self._seq = 0
+        self.delivered: set = set()
+
+    def next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+
+def transmit(loop, link: "Link", payload: Payload, t_tx: float,
+             deliver, direction: str = "up") -> None:
+    """Send ``payload`` over ``link``, invoking ``deliver`` exactly once
+    when the first copy arrives.
+
+    With no reliability model this is exactly ``loop.schedule(t_tx,
+    deliver)`` — one event, bit-identical to the loss-free simulation.
+    With one, the payload gets a sequence number and rides the lossy
+    channel: dropped copies trigger an ack-timeout retransmit of the SAME
+    payload object with exponential backoff (``Transport.
+    total_retransmits`` counts them); duplicate/late copies are dropped by
+    the receiver's sequence dedup before they can touch decode state, EF
+    residuals, or byte counters."""
+    rel = link.reliability
+    if rel is None:
+        aud = link.t.audit
+        if aud is None:
+            loop.schedule(t_tx, deliver)
+            return
+        # reliable link on an audited transport (e.g. the promoted root's
+        # loopback after failover): same single event, but the delivery
+        # ledger still books the transfer so the chaos auditor closes
+        aud.note_sent(direction, payload.wire_bytes, False)
+
+        def _deliver_booked():
+            aud.note_delivered(direction, payload.wire_bytes)
+            deliver()
+        loop.schedule(t_tx, _deliver_booked)
+        return
+    t = link.t
+    aud = t.audit
+    ch = link.channel()
+    seq = ch.next_seq()
+
+    def _arrive():
+        if seq in ch.delivered:          # duplicate or late retransmit:
+            if aud is not None:          # dropped before ANY codec state
+                aud.note_dup(direction)
+            return
+        ch.delivered.add(seq)            # doubles as the (instant) ack
+        if aud is not None:
+            aud.note_delivered(direction, payload.wire_bytes)
+        deliver()
+
+    def _send(attempt: int):
+        if aud is not None:
+            aud.note_sent(direction, payload.wire_bytes, attempt > 0)
+        if attempt > 0:
+            t.total_retransmits += 1
+        dropped = ch.rng.random_sample() < rel.drop_p
+        duped = ch.rng.random_sample() < rel.dup_p
+        if not dropped:
+            loop.schedule(t_tx, _arrive)
+            if duped:                    # network-level duplicate, late
+                loop.schedule(rel.dup_delay * t_tx, _arrive)
+        if attempt + 1 < rel.max_attempts:
+            loop.schedule(link.rto(payload.wire_bytes, t_tx, attempt),
+                          lambda: _check(attempt))
+
+    def _check(attempt: int):
+        if seq in ch.delivered or t.closed:   # acked, or the sender died
+            return                            # — retransmit timer dies
+        _send(attempt + 1)
+
+    _send(0)
+
+
+# sentinel: "no per-link override — inherit the transport's reliability"
+_REL_INHERIT = object()
+
+
 class Link:
     """One server<->worker channel: per-link codec state.
 
@@ -359,14 +540,52 @@ class Link:
     """
 
     def __init__(self, transport: "Transport",
-                 ack: Optional[WorkerAckState] = None):
+                 ack: Optional[WorkerAckState] = None,
+                 worker_id: str = ""):
         self.t = transport
+        self.worker_id = worker_id
         self.tx_base: Optional[jnp.ndarray] = None   # packed dispatch base
         self.residual: Optional[jnp.ndarray] = None  # uplink EF (topk_ef*)
         self._ack = ack if ack is not None else WorkerAckState()
         # in-flight downlink awaiting ack:
         # (payload, revert-chain entry or None, pinned encode base or None)
         self._pending_down: Optional[tuple] = None
+        self._reliability = _REL_INHERIT   # per-link override (loopbacks)
+        self._chan: Optional[_Channel] = None
+
+    # --- lossy-channel state ---
+    @property
+    def reliability(self) -> Optional[LinkReliability]:
+        r = self._reliability
+        return self.t.reliability if r is _REL_INHERIT else r
+
+    @reliability.setter
+    def reliability(self, value: Optional[LinkReliability]):
+        self._reliability = value
+
+    def channel(self) -> _Channel:
+        ch = self._chan
+        if ch is None:
+            # crc32, not hash(): per-process hash randomisation would
+            # break the seeded-replay guarantee
+            mix = (zlib.crc32(self.worker_id.encode())
+                   ^ (self.reliability.seed * 2654435761)) & 0xFFFFFFFF
+            ch = self._chan = _Channel(mix)
+        return ch
+
+    def rto(self, wire_bytes: int, t_tx: float, attempt: int) -> float:
+        """Retransmit timeout for copy ``attempt``: ``timeout_mult`` times
+        the estimated one-way time — the estimator's measured bandwidth
+        when the transport has one bound (``rel_estimator``), the actual
+        transmit time otherwise — with exponential backoff."""
+        rel = self.reliability
+        base = t_tx
+        est = self.t.rel_estimator
+        if est is not None and self.worker_id:
+            bw = est.bandwidth(self.worker_id)
+            if bw:
+                base = wire_bytes / bw
+        return rel.timeout_mult * max(base, t_tx) * rel.backoff ** attempt
 
     @property
     def acked_base(self) -> Optional[jnp.ndarray]:
@@ -631,6 +850,16 @@ class Transport:
         else:
             raise ValueError("non-packable template needs raw_bytes")
         self._links: Dict[str, Link] = {}
+        # lossy-channel model (None = perfect wire, the default);
+        # runtime/faults injects these per tier
+        self.reliability: Optional[LinkReliability] = None
+        self.rel_estimator = None     # TimeEstimator pricing retransmit RTOs
+        self.total_retransmits = 0
+        self.audit: Optional[TransportAudit] = None
+        # a dead owner (e.g. a failed-over root) closes its transport:
+        # copies already on the wire still arrive, but retransmit timers
+        # stop re-sending on the dead process's behalf
+        self.closed = False
         # one packed copy of the current server model per dispatch round:
         # every selected worker's encode_down shares it (keyed on tree
         # identity, the FlatServerState mirror pattern)
@@ -667,25 +896,39 @@ class Transport:
         if l is None:
             ack = (self._ack_registry.state(worker_id)
                    if self._ack_registry is not None else None)
-            l = self._links[worker_id] = Link(self, ack)
+            l = self._links[worker_id] = Link(self, ack, worker_id)
         return l
 
     # --- expected costs (selection time budgets / straggler timeouts) ---
+    def _retx_factor(self) -> float:
+        """Expected transmissions per delivered payload on a lossy link
+        (geometric: 1/(1-drop_p)) — scales the selection-pricing byte
+        estimates so eq-3.4 time budgets and straggler timeouts price the
+        retransmit tax in.  1.0 on a perfect wire, so every existing
+        (reliability=None) pricing is untouched."""
+        rel = self.reliability
+        if rel is None or rel.drop_p <= 0.0:
+            return 1.0
+        return 1.0 / max(1.0 - rel.drop_p, 1e-3)
+
     def expected_down_bytes(self) -> int:
         """Per-dispatch downlink estimate from the down codec spec (the
         steady state: first-contact dispatches cost ``raw_bytes``)."""
         if self.bundle is None:
-            return self.raw_bytes
-        return expected_codec_bytes(self.spec_down, self.bundle.n_params,
-                                    self.raw_bytes, self.frac)
+            return int(self.raw_bytes * self._retx_factor())
+        return int(expected_codec_bytes(self.spec_down,
+                                        self.bundle.n_params,
+                                        self.raw_bytes, self.frac)
+                   * self._retx_factor())
 
     def expected_up_bytes(self) -> int:
         """Per-response uplink estimate from the codec spec (top-k codecs:
         assumes exactly k survivors)."""
         if self.bundle is None:
-            return self.raw_bytes
-        return expected_codec_bytes(self.spec_up, self.bundle.n_params,
-                                    self.raw_bytes, self.frac)
+            return int(self.raw_bytes * self._retx_factor())
+        return int(expected_codec_bytes(self.spec_up, self.bundle.n_params,
+                                        self.raw_bytes, self.frac)
+                   * self._retx_factor())
 
     def expected_oneway_bytes(self) -> int:
         """Mean per-direction bytes of a round trip — the figure the

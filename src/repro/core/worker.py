@@ -16,7 +16,7 @@ import jax
 
 from .estimator import WorkerProfile
 from .events import EventLoop
-from .transport import Link, Payload
+from .transport import Link, Payload, transmit
 from .warehouse import DataWarehouse, Pointer
 
 
@@ -121,11 +121,17 @@ class FLWorker:
             return  # silently drop: a failed/foreign request never responds
         self.busy = True
         t_fetch = self.true_t_transmit(down.wire_bytes)
-        if link.needs_down_ack:
-            # stateful downlink: decode + ack at the fetch-complete event
+        if link.needs_down_ack or link.reliability is not None:
+            # stateful downlink: decode + ack at the fetch-complete event.
+            # A lossy link routes even stateless payloads through here —
+            # the channel must deliver before the worker can decode, and
+            # the staged event is what transmit() retransmits against.
             self._fetching[server_pointer] = (down, link)
-            self.loop.schedule(t_fetch, self._fetch_done, server_pointer,
-                               down, base_version, epochs, link, on_done)
+            transmit(self.loop, link, down, t_fetch,
+                     lambda: self._fetch_done(server_pointer, down,
+                                              base_version, epochs, link,
+                                              on_done),
+                     direction="down")
             return
         weights = link.decode_down(down)
         self._after_fetch(server_pointer, weights, base_version, epochs,
@@ -145,8 +151,13 @@ class FLWorker:
             return
         # the explicit fetch-complete event: decode against the local
         # acked base and advance the ack — even if this worker now dies
-        # mid-round, the server knows which base it holds
-        weights = link.complete_fetch(down)
+        # mid-round, the server knows which base it holds.  Stateless
+        # downlinks staged here only for the lossy channel skip the ack
+        # bookkeeping entirely
+        if link.needs_down_ack:
+            weights = link.complete_fetch(down)
+        else:
+            weights = link.decode_down(down)
         self._after_fetch(server_pointer, weights, base_version, epochs,
                           link, on_done, 0.0)
 
@@ -155,6 +166,10 @@ class FLWorker:
                      t_fetch: float):
         """Train + respond, scheduled ``t_fetch`` from now (0.0 when called
         from the fetch-complete event itself)."""
+        if link.t.audit is not None:
+            # chaos ledger: this worker now holds the model of this server
+            # version — the monotone-version invariant's raw material
+            link.t.audit.note_fetch(self.worker_id, base_version)
         t_train = self.true_t_one() * epochs
 
         def _train():
@@ -170,7 +185,10 @@ class FLWorker:
                                 t_up=t_up, up_bytes=up_bytes))
 
         up_bytes = link.upfront_up_bytes()
-        if up_bytes is not None:
+        if up_bytes is not None and link.reliability is None:
+            # single-event fast path: only on a perfect wire — a lossy
+            # uplink must go through the staged _inflight protocol so the
+            # channel has a cancellable in-flight record to retransmit
             def _finish():
                 # died mid-training, or the server dropped this worker
                 # (remove_server): a response would never be redeemed
@@ -212,5 +230,5 @@ class FLWorker:
                     self.busy = False
                     return
                 _deliver(ticket, t_up, up.wire_bytes)
-            self.loop.schedule(t_up, _send)
+            transmit(self.loop, link, up, t_up, _send, direction="up")
         self.loop.schedule(t_fetch + t_train, _train_then_send)

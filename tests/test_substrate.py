@@ -46,6 +46,25 @@ def test_checkpoint_ignores_partial_writes(tmp_path):
     assert step == 1 and np.array_equal(state["x"], np.ones(3))
 
 
+def test_checkpoint_skips_corrupt_snapshot(tmp_path):
+    """A corrupt/truncated published snapshot (crash on a filesystem
+    without atomic rename, partial copy) is skipped with a warning and
+    restore falls back to the newest readable step."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, {"x": np.ones(2)})
+    mgr.save(2, {"x": np.full(2, 2.0)})
+    mgr.save(3, {"x": np.full(2, 3.0)})
+    mgr._path(3).write_bytes(mgr._path(3).read_bytes()[:10])  # truncate
+    with pytest.warns(UserWarning, match="step 3"):
+        step, state, _ = mgr.restore_latest()
+    assert step == 2 and np.array_equal(state["x"], np.full(2, 2.0))
+    # every snapshot corrupt -> None, not an exception
+    mgr._path(2).write_bytes(b"\x00garbage")
+    mgr._path(1).write_bytes(b"")
+    with pytest.warns(UserWarning):
+        assert mgr.restore_latest() is None
+
+
 def test_train_restart_equivalence(tmp_path):
     """Checkpoint at step k, restart, continue — identical params to an
     uninterrupted run (bitwise, same batches)."""

@@ -378,3 +378,90 @@ def test_cancelled_downlink_conserves_future_mass(shapes, frac, seed):
     err = float(jnp.max(jnp.abs(
         (link.acked_base - acked) + link.down_residual - x)))
     assert err < 1e-4
+
+
+# ---------------- unreliable links (retransmit idempotency) ----------------
+
+from repro.core.events import EventLoop                    # noqa: E402
+
+
+def _same_opt(a, b) -> bool:
+    if a is None or b is None:
+        return a is None and b is None
+    return bool(jnp.array_equal(a, b))
+
+
+@pytest.mark.parametrize("codec", ["delta", "int8", "topk_ef+int8"])
+@given(shapes=shapes_st, frac=frac_st, seed=st.integers(0, 2**16),
+       drop_p=st.floats(0.0, 0.5), dup_p=st.floats(0.0, 0.5),
+       rounds=st.integers(1, 3))
+@settings(deadline=None, max_examples=10)
+def test_retransmit_idempotency_matches_lossless(codec, shapes, frac, seed,
+                                                 drop_p, dup_p, rounds):
+    """Retransmit idempotency: under an arbitrary seeded drop/duplicate/
+    reorder schedule, once every payload has delivered, the lossy link's
+    decode state (tx/acked bases), EF residuals (both directions), and
+    cumulative delivered byte counters are BIT-identical to the loss-free
+    twin running the same logical sequence — a retransmit re-sends the
+    same payload object and a duplicate is deduplicated before it can
+    touch any codec state."""
+    base = _tree(shapes, seed)
+    t_lossy = transport.Transport(base, codec=codec, frac=frac)
+    t_free = transport.Transport(base, codec=codec, frac=frac)
+    t_lossy.reliability = transport.LinkReliability(
+        drop_p=drop_p, dup_p=dup_p, seed=seed)
+    t_lossy.audit = transport.TransportAudit()
+    ll, lf = t_lossy.link("w0"), t_free.link("w0")
+    loop = EventLoop()
+    models = [_tree(shapes, seed + r + 1, scale=0.5) for r in range(rounds)]
+    lossy_bytes = {"down": 0, "up": 0}
+    lossy_ups = []
+
+    def run_round(r):
+        if r >= rounds:
+            return
+        model = models[r]
+        down = ll.encode_down(model)
+
+        def fetched():
+            lossy_bytes["down"] += down.wire_bytes
+            ll.complete_fetch(down)
+            up = ll.encode_up(model)    # "train" = echo the fetched model
+            lossy_ups.append(up.wire_bytes)
+
+            def responded():
+                lossy_bytes["up"] += up.wire_bytes
+                ll.decode_up_vec(up)
+                run_round(r + 1)
+            # duplicate copies of round r's payloads arrive at 2*t_tx —
+            # after round r+1 has started: genuine cross-round reordering
+            transport.transmit(loop, ll, up, 1.0, responded, "up")
+        transport.transmit(loop, ll, down, 1.0, fetched, "down")
+
+    run_round(0)
+    loop.run()
+    # loss-free twin, same logical sequence, direct calls
+    free_bytes = {"down": 0, "up": 0}
+    free_ups = []
+    for model in models:
+        d = lf.encode_down(model)
+        free_bytes["down"] += d.wire_bytes
+        lf.complete_fetch(d)
+        u = lf.encode_up(model)
+        free_ups.append(u.wire_bytes)
+        free_bytes["up"] += u.wire_bytes
+        lf.decode_up_vec(u)
+    assert lossy_ups == free_ups            # byte-identical encodes
+    assert lossy_bytes == free_bytes        # all payloads delivered once
+    assert _same_opt(ll.tx_base, lf.tx_base)
+    assert _same_opt(ll.acked_base, lf.acked_base)
+    assert _same_opt(ll.residual, lf.residual)
+    assert _same_opt(ll.down_residual, lf.down_residual)
+    # ledger closes: unique deliveries == the loss-free wire, retransmit
+    # accounting consistent, and every sent payload was original exactly once
+    aud = t_lossy.audit
+    assert aud.delivered_bytes == free_bytes
+    assert aud.sent_bytes == free_bytes
+    assert t_lossy.total_retransmits == aud.retx_count
+    assert aud.delivered_count["down"] == rounds
+    assert aud.delivered_count["up"] == rounds
