@@ -14,12 +14,12 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 def main() -> None:
     from benchmarks import agg_bench, agg_shard_bench, fl_figures, \
-        roofline, wire_bench
+        roofline, scale_bench, wire_bench
 
     # CI smoke dispatch: run exactly one tiny sweep and exit (the full
     # table below is the local/nightly path).  One entry point per flag:
-    # --smoke-dlink lives in fl_figures.py's __main__, --smoke-topology
-    # and --smoke-chaos here
+    # --smoke-dlink lives in fl_figures.py's __main__, --smoke-topology,
+    # --smoke-chaos and --smoke-scale here
     if "--smoke-topology" in sys.argv:
         print(json.dumps(fl_figures.fig_topology_sweep(smoke=True),
                          indent=2))
@@ -28,18 +28,28 @@ def main() -> None:
         print(json.dumps(fl_figures.fig_chaos_sweep(smoke=True),
                          indent=2))
         return
+    if "--smoke-scale" in sys.argv:
+        scale_bench.main(smoke=True)
+        return
 
-    agg_bench.main()
-    print()
-    agg_shard_bench.main()
-    print()
-    wire_bench.main()
-    print()
+    # the full sweep tolerates any one bench dying (e.g. an optional dep
+    # missing from a minimal environment): the rest still report
+    for bench in (agg_bench.main, agg_shard_bench.main, wire_bench.main,
+                  scale_bench.main):
+        try:
+            bench()
+        except Exception as e:                      # noqa: BLE001
+            print(f"[skipped] {bench.__module__}: {type(e).__name__}: {e}")
+        print()
 
     print("name,us_per_call,derived")
     for name, fn in fl_figures.ALL.items():
         t0 = time.time()
-        derived = fn()
+        try:
+            derived = fn()
+        except Exception as e:                      # noqa: BLE001
+            print(f"{name},0,\"[skipped] {type(e).__name__}\"")
+            continue
         us = (time.time() - t0) * 1e6
         short = json.dumps(derived, default=lambda o: round(o, 3)
                            if isinstance(o, float) else o)

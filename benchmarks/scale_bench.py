@@ -1,0 +1,215 @@
+"""Massive-scale worker-simulation benchmark: population size sweep.
+
+Sweeps the worker population W from 10 to 10,000 with a FIXED cohort (64
+workers sampled per round) and measures what actually bounds scale:
+
+  * wall-clock rounds/s — per-round cost must track the cohort, not W
+    (the acceptance bar: W=10,000 with a 64-cohort runs at >= 0.5x the
+    rounds/s of a PLAIN 64-worker population);
+  * peak row-buffer bytes — the merge window must stay O(cohort x N),
+    never O(W x N);
+  * resident link state — LRU-bounded, O(active cohorts);
+  * per-object footprint of the hot control-plane classes
+    (``transport.Payload``, ``transport.Link``, ``events._Event``,
+    ``worker.FLWorker``) against dict-based twins — what ``__slots__``
+    buys at W=10^4.
+
+Emits ``benchmarks/results/BENCH_scale.json``.  Run directly, via
+``benchmarks/run.py`` (``--smoke-scale`` for the CI smoke), or import
+:func:`run`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+COHORT = 64
+ROUNDS = 5
+EPOCHS = 1
+SWEEP_W = (10, 100, 1_000, 10_000)
+SMOKE_W = (10, 200)
+SMOKE_COHORT = 8
+SMOKE_ROUNDS = 2
+
+
+def _setup_for(W: int, seed: int = 0):
+    """One tiny MLP shard replicated across W workers: every worker
+    trains the same single batch, so per-round numerics cost is constant
+    and the sweep isolates the CONTROL-PLANE cost of W."""
+    from repro.core.experiment import heterogeneous_profiles, make_setup
+    base = make_setup([1], model="mlp", seed=seed)
+    return dataclasses.replace(
+        base,
+        shards=[base.shards[0]] * W,
+        profiles=heterogeneous_profiles(W, "mixed", [1] * W, seed=seed))
+
+
+def _run_one(W: int, cohort, rounds: int, seed: int = 0) -> dict:
+    """One measured run, built inline (mirroring ``run_fl``) so the
+    post-run internals — row-buffer capacity, resident links, eviction
+    and event-heap counters — are inspectable."""
+    import jax
+
+    from repro.core.estimator import TimeEstimator
+    from repro.core.events import EventLoop
+    from repro.core.population import WorkerPopulation
+    from repro.core.selection import make_selector
+    from repro.core.server import AggregationServer
+    from repro.core.transport import Transport
+    from repro.core.worker import FLWorker
+
+    setup = _setup_for(W, seed)
+    loop = EventLoop()
+    est = TimeEstimator(t_onebatch_server=setup.per_batch_server)
+    pop = WorkerPopulation()
+    est.bind_population(pop)
+    tr = Transport(setup.weights0, codec="raw",
+                   raw_bytes=setup.model_bytes)
+    sel = make_selector("all", est, tr.expected_oneway_bytes)
+    server = AggregationServer(
+        weights=setup.weights0, loop=loop, estimator=est, selector=sel,
+        eval_fn=setup.eval_fn, model_bytes=setup.model_bytes,
+        mode="sync", epochs_per_round=EPOCHS, max_rounds=rounds,
+        transport=tr, population=pop, cohort=cohort)
+    t_build0 = time.perf_counter()
+    for prof, shard in zip(setup.profiles, setup.shards):
+        server.add_worker(FLWorker(
+            prof.worker_id, profile=prof, data=shard,
+            train_fn=setup.train_fn, loop=loop,
+            per_batch_time=0.05 * 3.0 / (prof.cpu_freq * prof.cpu_prop)))
+    build_s = time.perf_counter() - t_build0
+    server.start()
+    t0 = time.perf_counter()
+    loop.run(max_events=100_000_000)
+    jax.block_until_ready(jax.tree.leaves(server.weights))
+    wall = time.perf_counter() - t0
+    flat = server._flat
+    n_rounds = server.version
+    return {
+        "W": W,
+        "cohort": cohort,
+        "sim_rounds": n_rounds,
+        "build_s": round(build_s, 4),
+        "wall_s": round(wall, 4),
+        "rounds_per_s": round(n_rounds / max(wall, 1e-9), 3),
+        "row_buffer_capacity": flat.capacity,
+        "row_buffer_bytes": flat.capacity * flat.bundle.padded_size * 4,
+        "resident_links": len(tr._links),
+        "link_evictions": tr.total_link_evictions,
+        "final_accuracy": round(server.history[-1].accuracy, 4),
+        "event_heap_left": len(loop._q),
+    }
+
+
+def _slots_report() -> dict:
+    """Per-object footprint of the slotted hot classes vs dict twins."""
+    from repro.core import events, transport
+    from repro.core.estimator import WorkerProfile
+    from repro.core.events import EventLoop
+    from repro.core.worker import FLWorker
+
+    def size(obj) -> int:
+        n = sys.getsizeof(obj)
+        d = getattr(obj, "__dict__", None)
+        # an empty dict only exists because we just read __dict__ here —
+        # Link's is lazy (one pointer) until a test spy assigns through it
+        if d:
+            n += sys.getsizeof(d)
+        return n
+
+    class DictPayload:
+        def __init__(self, codec, wire_bytes, data):
+            self.codec, self.wire_bytes, self.data = codec, wire_bytes, data
+
+    class DictEvent:
+        def __init__(self, time, seq, fn, args=(), cancelled=False):
+            self.time, self.seq, self.fn = time, seq, fn
+            self.args, self.cancelled = args, cancelled
+
+    class DictWorker:
+        def __init__(self):
+            for k in FLWorker.__slots__:
+                setattr(self, k, None)
+
+    tr = transport.Transport({"w": __import__("numpy").zeros(4)},
+                             codec="raw", raw_bytes=16)
+    link = tr.link("w0")
+
+    class DictLink:
+        def __init__(self):
+            for k in ("t", "worker_id", "tx_base", "residual", "_ack",
+                      "_pending_down", "_reliability", "_chan"):
+                setattr(self, k, None)
+
+    payload = transport.Payload("raw", 16, None)
+    ev = events._Event(0.0, 0, lambda: None)
+    w = FLWorker("w", profile=WorkerProfile("w"), data={},
+                 train_fn=None, loop=EventLoop(), per_batch_time=1.0)
+    return {
+        "payload_bytes": {"slotted": size(payload),
+                          "dict": size(DictPayload("raw", 16, None))},
+        "event_bytes": {"slotted": size(ev),
+                        "dict": size(DictEvent(0.0, 0, lambda: None))},
+        "link_bytes": {"slotted": size(link), "dict": size(DictLink())},
+        "flworker_bytes": {"slotted": size(w), "dict": size(DictWorker())},
+    }
+
+
+def run(smoke: bool = False) -> dict:
+    ws = SMOKE_W if smoke else SWEEP_W
+    cohort = SMOKE_COHORT if smoke else COHORT
+    rounds = SMOKE_ROUNDS if smoke else ROUNDS
+    sweep = []
+    for W in ws:
+        r = _run_one(W, min(cohort, W), rounds)
+        sweep.append(r)
+        print(f"W={W:>6} cohort={r['cohort']:>3} "
+              f"{r['rounds_per_s']:>8.2f} rounds/s  "
+              f"rowbuf={r['row_buffer_bytes']:>10d}B "
+              f"links={r['resident_links']:>4d} "
+              f"evict={r['link_evictions']}", file=sys.stderr)
+    plain = _run_one(cohort, None, rounds)
+    print(f"W={cohort:>6} (no cohort) {plain['rounds_per_s']:>8.2f} "
+          f"rounds/s", file=sys.stderr)
+    biggest = sweep[-1]
+    out = {
+        "config": {"cohort": cohort, "rounds": rounds, "epochs": EPOCHS,
+                   "smoke": smoke},
+        "sweep": sweep,
+        "plain_cohort_sized": plain,
+        "acceptance": {
+            # W=max with a fixed cohort must hold >= 0.5x the rounds/s of
+            # a plain cohort-sized population (the control plane may cost
+            # something at 10^4 lanes, but never a 2x round slowdown)
+            "big_W_vs_plain_ratio": round(
+                biggest["rounds_per_s"] / max(plain["rounds_per_s"], 1e-9),
+                4),
+            # the merge window must be O(cohort x N): capacity within 2x
+            # of the cohort (geometric row growth), regardless of W
+            "row_buffer_capacity_le_2x_cohort":
+                biggest["row_buffer_capacity"] <= 2 * cohort,
+            "resident_links_bounded":
+                biggest["resident_links"] <= max(4 * cohort, 64),
+        },
+        "slots": _slots_report(),
+    }
+    return out
+
+
+def main(smoke: bool = False) -> None:
+    out = run(smoke=smoke)
+    RESULTS.mkdir(exist_ok=True)
+    path = RESULTS / "BENCH_scale.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv)

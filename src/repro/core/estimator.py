@@ -23,6 +23,12 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
+import numpy as np
+
+# profile fields mirrored into WorkerPopulation lane arrays (population.py)
+_POP_SYNCED = frozenset(
+    {"cpu_freq", "cpu_prop", "bandwidth", "n_batches", "failed"})
+
 
 @dataclass
 class WorkerProfile:
@@ -33,6 +39,30 @@ class WorkerProfile:
     bandwidth: float = 100e6     # bytes/s on the weight-transfer channel
     n_batches: int = 1           # batches of training data held (tables 4.1/4.2)
     failed: bool = False         # fault-injection flag (node failure)
+
+    def __setattr__(self, name, value):
+        # adoption hook (population.py): a profile adopted into a
+        # WorkerPopulation forwards direct mutations (fault injectors and
+        # tests write ``p.failed = True`` on the object) into its lane, so
+        # the vectorized control plane can never go stale.  Populations
+        # are held by weakref — a profile adopted by successive runs must
+        # not keep a dead run's arrays alive.
+        object.__setattr__(self, name, value)
+        if name not in _POP_SYNCED:
+            return
+        bindings = self.__dict__.get("_bindings")
+        if not bindings:
+            return
+        dead = False
+        for ref, lane in bindings:
+            pop = ref()
+            if pop is None:
+                dead = True
+            else:
+                pop._on_profile_set(lane, name, value)
+        if dead:
+            self.__dict__["_bindings"] = [
+                (r, l) for r, l in bindings if r() is not None]
 
 
 class TimeEstimator:
@@ -45,6 +75,15 @@ class TimeEstimator:
         self._measured_t_one: Dict[str, float] = {}
         # worker -> (measured seconds, measured bytes): a bandwidth sample
         self._measured_tx: Dict[str, Tuple[float, int]] = {}
+        # optional WorkerPopulation mirror: observe_* writes the lane
+        # arrays too, so the vectorized pricing below never goes stale
+        self._pop = None
+
+    def bind_population(self, pop) -> None:
+        """Mirror every measurement into ``pop``'s lane arrays (and
+        backfill lanes for anything already measured)."""
+        self._pop = pop
+        pop.bind_estimator(self)
 
     # --- eq 3.4 ---
     def t_one(self, p: WorkerProfile) -> float:
@@ -65,6 +104,29 @@ class TimeEstimator:
             return t_meas * (model_bytes / max(bytes_meas, 1))
         return model_bytes / max(p.bandwidth, 1.0)
 
+    # --- eq 3.4, fused over a population view ---
+    # Bit-identical to the scalar methods above: float64 numpy elementwise
+    # ops are the same IEEE-754 doubles CPython computes on scalars, and
+    # the per-lane operation ORDER matches the scalar expressions exactly
+    # (pinned by the golden histories, which run the vector path).
+    def t_one_vec(self, view) -> np.ndarray:
+        """:meth:`t_one` for every lane of a ``PopulationView`` at once."""
+        pop, l = view.pop, view.lanes
+        per_batch = self.t_onebatch_server * self.server_freq / \
+            np.maximum(pop.cpu_freq[l] * pop.cpu_prop[l], 1e-9)
+        est = per_batch * np.maximum(pop.n_batches[l], 0)
+        meas = pop.t_one_meas[l]
+        return np.where(np.isnan(meas), est, meas)
+
+    def t_transmit_vec(self, view, model_bytes: int) -> np.ndarray:
+        """:meth:`t_transmit` for every lane of a view at once (measured
+        bandwidth where a transfer has been observed, nominal otherwise)."""
+        pop, l = view.pop, view.lanes
+        t_meas = pop.tx_t[l]
+        measured = t_meas * (model_bytes / np.maximum(pop.tx_bytes[l], 1))
+        nominal = model_bytes / np.maximum(pop.bandwidth[l], 1.0)
+        return np.where(np.isnan(t_meas), nominal, measured)
+
     def bandwidth(self, worker_id: str) -> Optional[float]:
         """Measured bytes/s for a worker, or None before any observation."""
         m = self._measured_tx.get(worker_id)
@@ -77,7 +139,11 @@ class TimeEstimator:
     # time consumed for communication and training is updated') ---
     def observe_training(self, worker_id: str, t_one_measured: float):
         self._measured_t_one[worker_id] = t_one_measured
+        if self._pop is not None:
+            self._pop.note_t_one(worker_id, t_one_measured)
 
     def observe_transmit(self, worker_id: str, t_tx_measured: float,
                          n_bytes: int):
         self._measured_tx[worker_id] = (t_tx_measured, int(n_bytes))
+        if self._pop is not None:
+            self._pop.note_tx(worker_id, t_tx_measured, int(n_bytes))

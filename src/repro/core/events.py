@@ -7,6 +7,17 @@ durations come from the same system statistics FogBus2's profiler exposes
 (CPU frequency x availability, data size, link bandwidth), while the actual
 numerics (JAX training steps) execute for real. The engine is deterministic:
 ties break by sequence number, never by wall clock.
+
+Cancellation is lazy: :meth:`EventLoop.schedule` returns the queued
+:class:`_Event` as a handle, :meth:`EventLoop.cancel` flags it dead
+(removing an arbitrary heap entry would be O(n)), and :meth:`run` skips
+dead entries as they surface.  Dead entries are compacted out of the heap
+whenever they exceed half of it, so a retransmit-heavy large-population
+run (every delivered payload cancels its pending ack-timeout) keeps the
+queue proportional to the LIVE event count instead of growing without
+bound.  Cancelling consumes no sequence numbers and never reorders live
+events, so a run with cancellations is event-order-identical to one where
+the dead entries fired as no-ops.
 """
 from __future__ import annotations
 
@@ -15,19 +26,25 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
+# compaction floor: below this many dead entries the rebuild costs more
+# than the heap overhead it reclaims
+_COMPACT_MIN = 64
 
-@dataclass(order=True)
+
+@dataclass(order=True, slots=True)
 class _Event:
     time: float
     seq: int
     fn: Callable = field(compare=False)
     args: tuple = field(compare=False, default=())
+    cancelled: bool = field(compare=False, default=False)
 
 
 class EventLoop:
     def __init__(self):
         self._q: list[_Event] = []
         self._seq = itertools.count()
+        self._n_cancelled = 0
         self.now = 0.0
         self._stopped = False
         # True iff the last run() returned because max_events was hit
@@ -35,20 +52,35 @@ class EventLoop:
         # and callers must not treat the history as valid
         self.exhausted = False
 
-    def schedule(self, delay: float, fn: Callable, *args) -> None:
+    def schedule(self, delay: float, fn: Callable, *args) -> _Event:
         assert delay >= 0, delay
-        heapq.heappush(self._q, _Event(self.now + delay, next(self._seq), fn, args))
+        ev = _Event(self.now + delay, next(self._seq), fn, args)
+        heapq.heappush(self._q, ev)
+        return ev
 
-    def at(self, time: float, fn: Callable, *args) -> None:
-        self.schedule(max(0.0, time - self.now), fn, *args)
+    def at(self, time: float, fn: Callable, *args) -> _Event:
+        return self.schedule(max(0.0, time - self.now), fn, *args)
 
-    def call_soon(self, fn: Callable, *args) -> None:
+    def call_soon(self, fn: Callable, *args) -> _Event:
         """Run ``fn`` at the current simulated time, but AFTER the call
         stack and any already-queued events at this timestamp (ties break
         by sequence number).  The topology layer uses this to settle
         same-instant leaf events — e.g. a leaf finishing and pushing in
         the same aggregate — before acting on their combined state."""
-        self.schedule(0.0, fn, *args)
+        return self.schedule(0.0, fn, *args)
+
+    def cancel(self, ev: Optional[_Event]) -> None:
+        """Flag a scheduled event dead (idempotent; None is a no-op).  The
+        heap entry is skipped by :meth:`run` and reclaimed by compaction."""
+        if ev is None or ev.cancelled:
+            return
+        ev.cancelled = True
+        self._n_cancelled += 1
+        if self._n_cancelled > _COMPACT_MIN \
+                and 2 * self._n_cancelled > len(self._q):
+            self._q = [e for e in self._q if not e.cancelled]
+            heapq.heapify(self._q)
+            self._n_cancelled = 0
 
     def stop(self) -> None:
         self._stopped = True
@@ -61,6 +93,9 @@ class EventLoop:
             if until is not None and ev.time > until:
                 heapq.heappush(self._q, ev)
                 break
+            if ev.cancelled:
+                self._n_cancelled -= 1
+                continue
             self.now = ev.time
             ev.fn(*ev.args)
             n += 1

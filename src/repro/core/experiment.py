@@ -19,6 +19,7 @@ from repro.parallel import sharding as psharding
 
 from .estimator import TimeEstimator, WorkerProfile
 from .events import EventLoop
+from .population import WorkerPopulation
 from .selection import make_selector
 from .server import AggregationServer, HistoryPoint, run_sequential
 from .transport import Transport
@@ -142,6 +143,7 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
            transport_down: Optional[str] = None,
            transport_frac: float = 0.1,
            server_mesh: Optional[int] = None,
+           cohort: Optional[int] = None, cohort_seed: int = 0,
            topology=None,
            topology_kw: Optional[dict] = None) -> List[HistoryPoint]:
     """One end-to-end FL run; returns the server's HistoryPoint sequence.
@@ -173,6 +175,15 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
     the run is bit-identical to the single-server path (pinned by the
     ``*_flat1x1`` golden aliases).  ``mode``/``max_rounds``/selection
     apply per leaf; ``target_accuracy`` is checked on the global model.
+
+    ``cohort`` turns on massive-scale cohort sampling: each round draws
+    that many alive workers (seeded by ``cohort_seed``) and only cohort
+    members get links, tickets, or events — per-round cost, resident
+    link state and the merge row window all scale with the cohort, not
+    the population.  ``cohort >= W`` (or ``None``) is bit-identical to
+    the full-population run (pinned in tests/test_scale.py).  Every run
+    binds a :class:`WorkerPopulation`, so selection prices eq 3.4 over
+    ``(W,)`` lane vectors in one fused pass either way.
     """
     if topology is not None:
         from .topology import parse_topology, run_fl_topology
@@ -186,11 +197,13 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
             async_min_updates=async_min_updates, async_delta=async_delta,
             async_latest_table=async_latest_table, transport=transport,
             transport_down=transport_down, transport_frac=transport_frac,
-            server_mesh=server_mesh)
+            server_mesh=server_mesh, cohort=cohort, cohort_seed=cohort_seed)
         return res.root_history
     loop = EventLoop()
     est = TimeEstimator(server_freq=server_freq,
                         t_onebatch_server=setup.per_batch_server)
+    pop = WorkerPopulation()
+    est.bind_population(pop)
     mesh = None if server_mesh is None else psharding.agg_mesh(server_mesh)
     # one codec'd weight-exchange path for every transfer; the selection
     # policies price their eq-3.4 time budget from its expected wire bytes.
@@ -208,7 +221,8 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
         max_rounds=max_rounds, target_accuracy=target_accuracy,
         async_alpha=async_alpha, async_stale_pow=async_stale_pow,
         async_min_updates=async_min_updates, async_delta=async_delta,
-        async_latest_table=async_latest_table, transport=tr, mesh=mesh)
+        async_latest_table=async_latest_table, transport=tr, mesh=mesh,
+        population=pop, cohort=cohort, cohort_seed=cohort_seed)
     for prof, shard in zip(setup.profiles, setup.shards):
         w = FLWorker(prof.worker_id, profile=prof, data=shard,
                      train_fn=setup.train_fn, loop=loop,

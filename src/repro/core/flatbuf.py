@@ -39,6 +39,7 @@ tests/test_agg_sharded.py).
 from __future__ import annotations
 
 import functools
+import heapq
 import os
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -355,6 +356,25 @@ class FlatServerState:
         self._rows: Optional[jnp.ndarray] = None
         self._server_flat: Optional[jnp.ndarray] = None
         self._server_tree: Optional[object] = None   # strong ref: mirror key
+        # --- cohort row window (win_claim/win_write/win_release) ---
+        # recycled rows, a min-heap: claims reuse the LOWEST free index,
+        # so a sync round's arrivals land in rows [0..n) in arrival order
+        # — the exact layout merge_rows produces, which is what makes the
+        # windowed merge bit-identical at cohort=W
+        self._free: list = []
+        self._next_row = 0            # high-water mark of ever-claimed rows
+        # released-but-not-yet-zeroed rows: zeroing is deferred and batched
+        # into one scatter right before the next merge (a stale non-finite
+        # value would turn 0 * inf into NaN inside the fused contraction)
+        self._dirty: set = set()
+        rkw = ({} if mesh is None
+               else {"out_shardings": self.bundle.row_sharding})
+        self._win_set = jax.jit(
+            lambda rows, vec, row: rows.at[row].set(vec),
+            donate_argnums=(0,), **rkw)
+        self._win_zero = jax.jit(
+            lambda rows, idx: rows.at[idx].set(0.0),
+            donate_argnums=(0,), **rkw)
 
     @property
     def capacity(self) -> int:
@@ -432,6 +452,81 @@ class FlatServerState:
         out = self.bundle.unpack(merged)
         self._server_flat, self._server_tree = merged, out
         return out
+
+    # --- cohort row window --------------------------------------------
+    # At massive scale the (W, N) row buffer is the memory wall: a
+    # 10k-worker population must NOT allocate 10k rows when only a
+    # 64-worker cohort is ever in flight.  The window keeps the SAME
+    # persistent buffer but sizes it by concurrent in-flight updates:
+    # each arriving update claims a row (lowest free index first),
+    # streams its vector in, and the merge contracts the window with the
+    # per-update weight scattered to its claimed row — same fused kernel,
+    # lane -> worker indirection in the weight vector.  Rows recycle on
+    # release, so peak memory is O(max concurrent updates x N), and at
+    # cohort=W the claim order degenerates to merge_rows' [0..n) layout,
+    # keeping the result bit-identical (pinned in tests/test_scale.py).
+
+    def win_claim(self) -> int:
+        """Claim a free row of the window for one in-flight update."""
+        if self._free:
+            return heapq.heappop(self._free)
+        row = self._next_row
+        self._next_row += 1
+        if row >= self.capacity:
+            # geometric growth: per-claim exact growth would copy the
+            # whole buffer O(window) times (extra capacity is harmless —
+            # zero rows at zero weight never change the merge result)
+            self._ensure_capacity(max(row + 1, 2 * self.capacity, 8))
+        return row
+
+    def win_write(self, row: int, vec) -> None:
+        """Land one already-packed update vector in its claimed row."""
+        self._rows = self._win_set(self._rows, vec, np.int32(row))
+        self._dirty.discard(row)
+
+    def win_release(self, row: int) -> None:
+        """Recycle a row: its update was merged (or abandoned).  The stale
+        data is zeroed lazily — batched into the next merge."""
+        heapq.heappush(self._free, row)
+        self._dirty.add(row)
+
+    def _flush_dirty(self) -> None:
+        if not self._dirty:
+            return
+        idx = np.fromiter(self._dirty, np.int32, len(self._dirty))
+        self._rows = self._win_zero(self._rows, idx)
+        self._dirty.clear()
+
+    def merge_window(self, server_tree, rows: Sequence[int],
+                     weights: Sequence[float], alpha: float = 1.0):
+        """Fused merge over the row window: ``rows[i]`` (a claimed row
+        index) carries the update weighted by ``weights[i]``; every other
+        row of the window contributes weight 0.  Same contraction as
+        :meth:`merge_rows`, same return convention."""
+        self._flush_dirty()
+        w = normalized_weights(weights)
+        idx = np.asarray(tuple(rows), np.intp)
+        if alpha >= 1.0:
+            wv = np.zeros((self.capacity,), np.float32)
+            wv[idx] = w
+            merged = fused_weighted_sum(self._rows, wv, self.use_pallas,
+                                        mesh=self.mesh)
+        else:
+            wvec = np.zeros((self.capacity + 1,), np.float32)
+            wvec[0] = 1.0 - alpha
+            wvec[idx + 1] = alpha * w
+            server_flat = self._server_buffer(server_tree)
+            merged = fused_merge(server_flat, self._rows, wvec,
+                                 self.use_pallas, mesh=self.mesh)
+        out = self.bundle.unpack(merged)
+        self._server_flat, self._server_tree = merged, out
+        return out
+
+    def row_vec(self, row: int) -> jnp.ndarray:
+        """Read one claimed row back as a packed flat vector (the
+        async_delta path applies per-update deltas straight off the
+        window)."""
+        return self._rows[row]
 
     def apply_delta(self, cur_tree, new_tree, base_tree):
         """``cur + (new - base)`` as one fused pass over packed buffers

@@ -25,7 +25,10 @@ import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Sequence, Union
 
+import numpy as np
+
 from .estimator import TimeEstimator, WorkerProfile
+from .population import as_view
 
 # the T_transmit term of the time budget is priced per *expected wire
 # bytes*: a plain int (the thesis' full model size) or a zero-arg callable
@@ -37,6 +40,17 @@ BytesSpec = Union[int, Callable[[], int]]
 
 def _resolve_bytes(model_bytes: BytesSpec) -> int:
     return int(model_bytes()) if callable(model_bytes) else int(model_bytes)
+
+
+def _alive_ids(workers) -> List[str]:
+    """Worker ids of the alive subset — one vectorized mask over the lane
+    arrays for a ``PopulationView``, the per-object scan for plain lists.
+    Both paths return ids in ``workers`` order, so downstream seeded
+    sampling draws identically whichever path ran."""
+    view = as_view(workers)
+    if view is not None:
+        return view.ids_where(view.alive_mask())
+    return [w.worker_id for w in workers if not w.failed]
 
 
 class Selector:
@@ -53,7 +67,7 @@ class AllSelector(Selector):
     name = "all"
 
     def select(self, workers):
-        return [w.worker_id for w in workers if not w.failed]
+        return _alive_ids(workers)
 
 
 class RandomSelector(Selector):
@@ -65,7 +79,7 @@ class RandomSelector(Selector):
         self.rng = random.Random(seed)
 
     def select(self, workers):
-        alive = [w.worker_id for w in workers if not w.failed]
+        alive = _alive_ids(workers)
         k = min(self.k, len(alive))
         return self.rng.sample(alive, k)
 
@@ -83,6 +97,21 @@ class RMinRMaxSelector(Selector):
         self._last_acc = 0.0
 
     def select(self, workers):
+        view = as_view(workers)
+        if view is not None:
+            # fused vector pass: eq 3.4 priced for every alive lane at
+            # once (bit-identical to the scalar scan — float64 lanes,
+            # same per-lane op order, and np.min/<= are exact)
+            alive = view.where(view.alive_mask())
+            if not len(alive):
+                return []
+            nbytes = _resolve_bytes(self.model_bytes)
+            t_one = self.est.t_one_vec(alive)
+            t_tx = self.est.t_transmit_vec(alive, nbytes)
+            t_min = t_one * self.rmin + t_tx
+            t_max = t_one * self.rmax + t_tx
+            alive.pop.score[alive.lanes] = t_min
+            return alive.ids_where(t_min <= np.min(t_max))
         alive = [w for w in workers if not w.failed]
         if not alive:
             return []
@@ -119,20 +148,46 @@ class TimeBasedSelector(Selector):
         return self.est.t_one(w) * self.r + \
             self.est.t_transmit(w, _resolve_bytes(self.model_bytes))
 
+    def _t_total_vec(self, view) -> np.ndarray:
+        return self.est.t_one_vec(view) * self.r + \
+            self.est.t_transmit_vec(view, _resolve_bytes(self.model_bytes))
+
     def select(self, workers):
+        view = as_view(workers)
+        if view is not None:
+            alive = view.where(view.alive_mask())
+            t_total = self._t_total_vec(alive)
+            alive.pop.score[alive.lanes] = t_total
+            selmask = t_total <= self.T
+            sel = alive.ids_where(selmask)
+            self._pending = alive
+            self._pending_selmask = selmask
+            self._last_selected = sel
+            return sel
         alive = [w for w in workers if not w.failed]
         sel = [w.worker_id for w in alive if self._t_total(w) <= self.T]
         self._pending = alive
+        self._pending_selmask = None
         self._last_selected = sel
         return sel
 
     def on_round_end(self, accuracy):   # eq 3.3
         gain = accuracy - self._last_acc
         if gain < self.A:
-            not_sel = [w for w in getattr(self, "_pending", [])
-                       if w.worker_id not in self._last_selected]
-            if not_sel:
-                self.T = min(self._t_total(w) for w in not_sel)
+            pending = getattr(self, "_pending", [])
+            selmask = getattr(self, "_pending_selmask", None)
+            if selmask is not None:
+                # same eq-3.3 raise, fused: re-price the not-selected
+                # lanes with the estimator's CURRENT measurements (the
+                # scalar path recomputes _t_total at round end too)
+                if not np.all(selmask):
+                    self.T = float(
+                        np.min(self._t_total_vec(pending.where(~selmask))))
+            else:
+                not_sel = [w for w in pending
+                           if w.worker_id not in self._last_selected]
+                if not_sel:
+                    self.T = min(self._t_total(w) for w in not_sel)
         self._last_acc = accuracy
 
 

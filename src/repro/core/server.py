@@ -12,16 +12,19 @@ re-dispatched — fast workers never wait for slow ones (§2.2.2.4 point 3).
 """
 from __future__ import annotations
 
+import random
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 import jax
+import numpy as np
 
 from . import aggregation as agg
 from . import flatbuf
 from . import transport as transport_mod
 from .estimator import TimeEstimator, WorkerProfile
 from .events import EventLoop
+from .population import WorkerPopulation, as_view
 from .selection import Selector
 from .warehouse import DataWarehouse, Pointer
 from .worker import FLWorker, TrainResult
@@ -51,7 +54,10 @@ class AggregationServer:
                  async_min_updates: int = 1, async_delta: bool = False,
                  async_latest_table: bool = True,
                  transport="raw", transport_down: Optional[str] = None,
-                 mesh=None, name: str = "aggregator"):
+                 mesh=None, name: str = "aggregator",
+                 population: Optional[WorkerPopulation] = None,
+                 cohort: Optional[int] = None, cohort_seed: int = 0,
+                 max_resident_links: Optional[int] = None):
         assert mode in ("sync", "async")
         self.name = name
         self.address = f"server://{name}"
@@ -109,6 +115,25 @@ class AggregationServer:
         # the pytree AGGREGATORS fallback needs trees in the cache)
         self._use_vec = agg.use_flat_vec(self._flat, self.transport,
                                          aggregator)
+        # --- massive-scale control plane (core/population.py) ---
+        # population: vectorized per-worker lanes — selection prices eq 3.4
+        # population-wide in one fused pass instead of a per-object scan.
+        # cohort: sample this many alive workers per round; only cohort
+        # members get links/tickets/events, so per-round cost scales with
+        # the cohort, not W.  Under a cohort the (W, N) row buffer shrinks
+        # to a claimed-row window (O(cohort x N) peak) and resident link
+        # state is LRU-bounded by max_resident_links.
+        self.population = population
+        self.cohort = cohort
+        self._cohort_rng = (random.Random(cohort_seed)
+                            if cohort is not None else None)
+        if max_resident_links is None and cohort is not None:
+            max_resident_links = max(4 * cohort, 64)
+        self.max_resident_links = max_resident_links
+        self._profiles_view = None          # cached population view
+        self._row_of: Dict[str, int] = {}   # worker -> claimed window row
+        self._window = cohort is not None and self._use_vec
+        self._inflight_w: set = set()       # dispatched, response pending
 
         # hierarchical topology (core/topology.py): when set, this server is
         # a LEAF under a root aggregator — _finish defers the loop-stop
@@ -138,6 +163,9 @@ class AggregationServer:
                           and worker.worker_id not in self.workers
                           and not self.done)
         self.workers[worker.worker_id] = worker
+        if self.population is not None:
+            self.population.adopt(worker.profile)
+        self._profiles_view = None
         worker.add_server(self.pointer)
         if joined_mid_run:
             # async servers dispatch per-response, so a worker joining a
@@ -152,6 +180,13 @@ class AggregationServer:
 
     def remove_worker(self, worker_id: str):
         w = self.workers.pop(worker_id, None)
+        if self.population is not None:
+            self.population.release(worker_id)
+        self._profiles_view = None
+        # NOTE: _latest / _row_of entries survive removal on purpose — the
+        # async latest-table keeps a departed worker's last response in the
+        # merge (legacy behaviour), so its claimed window row must stay
+        # claimed until the mode's normal release point
         if w is not None:
             # a departing worker's in-flight transfers are cancelled and
             # its ACL entry revoked: once the server forgets the worker,
@@ -163,7 +198,14 @@ class AggregationServer:
             w.cancel_inflight(self.pointer)
             w.remove_server(self.pointer)
 
-    def profiles(self) -> List[WorkerProfile]:
+    def profiles(self):
+        """Registered workers' profiles, in registry order — a
+        ``PopulationView`` (lane vectors + profile sequence) when a
+        population is bound, the legacy list otherwise."""
+        if self.population is not None:
+            if self._profiles_view is None:
+                self._profiles_view = self.population.view_for(self.workers)
+            return self._profiles_view
         return [w.profile for w in self.workers.values()]
 
     # --- main loop ---
@@ -225,7 +267,10 @@ class AggregationServer:
         if self.version >= self.max_rounds:
             self._finish()
             return
-        selected = self.selector.select(self.profiles())
+        pool = self.profiles()
+        if self.cohort is not None:
+            pool = self._sample_cohort(pool)
+        selected = self.selector.select(pool)
         self._round_id += 1
         if not selected:
             # nothing admitted (e.g. Alg2 with T=0): burn a no-op round so
@@ -260,6 +305,26 @@ class AggregationServer:
             self.loop.schedule(self.straggler_timeout_factor * max(t_max, 1e-3),
                                self._round_timeout, rid)
 
+    def _sample_cohort(self, pool):
+        """Seeded per-round cohort draw: sample ``cohort`` of the ALIVE
+        workers (dead lanes never enter the draw, so a chaos kill of a
+        never-contacted worker costs nothing) and return the pool filtered
+        to the draw, order preserved.  At ``cohort >= alive`` the draw is
+        the whole alive pool, so selection — and therefore the run — is
+        bit-identical to no cohort at all."""
+        view = as_view(pool)
+        if view is not None:
+            alive = view.ids_where(view.alive_mask())
+        else:
+            alive = [p.worker_id for p in pool if not p.failed]
+        chosen = set(self._cohort_rng.sample(alive,
+                                             min(self.cohort, len(alive))))
+        if view is not None:
+            mask = np.fromiter((wid in chosen for wid in view.worker_ids()),
+                               bool, len(view))
+            return view.where(mask)
+        return [p for p in pool if p.worker_id in chosen]
+
     def _send_train(self, wid: str, base_version: int) -> int:
         """Dispatch one train instruction; returns the actual downlink
         payload bytes (what the straggler timeout must be priced on)."""
@@ -278,6 +343,7 @@ class AggregationServer:
                 # packed link.tx_base directly)
                 base = self.transport.bundle.unpack(link.tx_base)
             self._dispatch_base[wid] = base
+        self._inflight_w.add(wid)
         w.train_async(self.pointer, down, base_version,
                       self.epochs_per_round, link, self._on_response)
         return down.wire_bytes
@@ -291,6 +357,7 @@ class AggregationServer:
         # payload, so stale/late responses can't leak a model-sized buffer
         # plus a live ticket in the worker's warehouse forever
         payload = w.warehouse.redeem_ticket(res.weights_ticket)
+        self._inflight_w.discard(res.worker_id)
         if self.done:
             return
         self.total_up_bytes += res.up_bytes   # the bytes crossed the wire
@@ -298,6 +365,9 @@ class AggregationServer:
                                   res.t_train / max(res.epochs, 1))
         self.est.observe_transmit(res.worker_id, res.t_up, res.up_bytes)
         staleness = self.version - res.base_version
+        if self.population is not None:
+            self.population.note_response(res.worker_id, res.base_version,
+                                          staleness)
         if self.mode == "sync" and staleness > 0:
             # thesis: sync ignores results that straddle an aggregation —
             # but the encoded mass must go back into the link's EF residual
@@ -329,6 +399,20 @@ class AggregationServer:
                 weights = jax.tree.map(
                     lambda cur, new, b: cur + (new - b), self.weights, weights,
                     base)
+        if self._window:
+            # streaming cohort-windowed merge: the decoded vector lands in
+            # a claimed window row NOW, and from here on this update is
+            # identified by its row INDEX — `_cache`/`_latest` carry the
+            # int through the existing rebuild logic untouched, and the
+            # merge contracts the window with weights scattered by row.
+            # A re-responding worker (async latest-table) overwrites its
+            # own stable row.
+            row = self._row_of.get(res.worker_id)
+            if row is None:
+                row = self._flat.win_claim()
+                self._row_of[res.worker_id] = row
+            self._flat.win_write(row, weights)
+            weights = row
         self._outstanding.discard(res.worker_id)
         if self.mode == "async":
             if self.async_latest_table:
@@ -350,6 +434,11 @@ class AggregationServer:
                 self._aggregate()
             else:
                 self._cache = []
+                if self._window and not self.async_latest_table:
+                    # discarded below-min updates: recycle their rows
+                    for row in self._row_of.values():
+                        self._flat.win_release(row)
+                    self._row_of.clear()
             if not self.done:
                 if self._hold:
                     self._held.append(res.worker_id)
@@ -378,6 +467,7 @@ class AggregationServer:
                 if wid in self.workers:
                     self.workers[wid].profile.failed = True
                     self.workers[wid].cancel_inflight(self.pointer)
+                self._inflight_w.discard(wid)
             self._outstanding.clear()
             if self._cache:
                 self._aggregate()
@@ -397,7 +487,20 @@ class AggregationServer:
         else:
             alpha = 1.0
         ws = agg.update_weights(self.aggregator, self._cache)
-        if self._use_vec and ws is not None:
+        if self._window and ws is not None:
+            # cohort window: cache entries carry claimed row indices; the
+            # merge contracts the O(cohort x N) window with each weight
+            # scattered to its row (same fused kernel as merge_rows)
+            self.weights = self._flat.merge_window(
+                self.weights, [u.weights for u in self._cache], ws, alpha)
+            if not (self.mode == "async" and self.async_latest_table):
+                # sync / single-arrival async: merged rows are dead —
+                # recycle them (latest-table workers keep stable rows,
+                # matching the legacy table's keep-latest semantics)
+                for row in self._row_of.values():
+                    self._flat.win_release(row)
+                self._row_of.clear()
+        elif self._use_vec and ws is not None:
             # fast path: responses were decoded straight to packed flat
             # vectors; land them in the (W, N) row buffer and fuse the
             # staleness-weighted sum + alpha-mix in one pass
@@ -415,6 +518,13 @@ class AggregationServer:
         self.warehouse.put(self.weights, uid=self.pointer.uid)
         n_upd = len(self._cache)
         self._cache = []
+        if self.max_resident_links is not None:
+            # bound resident link state to O(active cohorts): evict the
+            # coldest quiescent links — never one mid-conversation (in-
+            # flight response, claimed window row, parked while held)
+            keep = (self._outstanding | self._inflight_w
+                    | set(self._row_of) | set(self._held))
+            self.transport.lru_evict(keep, self.max_resident_links)
         self.version += 1
         acc = self._accuracy()
         self.selector.on_round_end(acc)

@@ -78,6 +78,7 @@ from repro.parallel import sharding as psharding
 
 from . import aggregation as agg
 from . import flatbuf
+from . import population as population_mod
 from . import transport as transport_mod
 from .estimator import TimeEstimator
 from .events import EventLoop
@@ -650,7 +651,8 @@ def build_topology(setup, *, topology, mode: str = "sync",
                    transport: str = "raw",
                    transport_down: Optional[str] = None,
                    transport_frac: float = 0.1,
-                   server_mesh: Optional[int] = None):
+                   server_mesh: Optional[int] = None,
+                   cohort: Optional[int] = None, cohort_seed: int = 0):
     """Construct (but do not run) one hierarchical system: the shared
     event loop, the root :class:`Topology`, and one leaf
     :class:`AggregationServer` per pool with its own estimator, selector,
@@ -681,6 +683,11 @@ def build_topology(setup, *, topology, mode: str = "sync",
                                [t.expected_oneway_bytes for t in transports],
                                **(selector_kw or {}))
     for j, pool in enumerate(pools):
+        # one vectorized population per leaf (pools are disjoint, and each
+        # leaf's selector prices against its own estimator's lanes);
+        # cohorts are drawn per leaf from per-leaf seeded streams
+        pop = population_mod.WorkerPopulation()
+        ests[j].bind_population(pop)
         server = AggregationServer(
             weights=setup.weights0, loop=loop, estimator=ests[j],
             selector=sels[j], eval_fn=setup.eval_fn,
@@ -690,7 +697,8 @@ def build_topology(setup, *, topology, mode: str = "sync",
             async_alpha=async_alpha, async_stale_pow=async_stale_pow,
             async_min_updates=async_min_updates, async_delta=async_delta,
             async_latest_table=async_latest_table, transport=transports[j],
-            mesh=mesh, name=f"leaf{j}")
+            mesh=mesh, name=f"leaf{j}", population=pop, cohort=cohort,
+            cohort_seed=cohort_seed + j)
         for i in pool:
             prof, shard = setup.profiles[i], setup.shards[i]
             server.add_worker(FLWorker(

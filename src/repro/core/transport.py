@@ -125,6 +125,35 @@ the byte counters remain "delivered payload bytes", which is what the
 chaos auditor closes the ledger against.  With ``reliability=None``
 (the default) :func:`transmit` degenerates to a single scheduled
 delivery event — bit-identical event order to the loss-free simulation.
+
+Lazy link lifecycle.  Links materialize on first contact only —
+``Transport.link(wid)`` creates the :class:`Link` the first time a
+server actually dispatches to (or hears from) a worker, so a
+massive-scale population (``run_fl(cohort=...)``) holds link state for
+workers that have ever been in a cohort, never all W.  Under cohort
+mode the server additionally bounds RESIDENT links: after each
+aggregate it calls :meth:`Transport.lru_evict`, which drops the
+least-recently-used QUIESCENT links (never one in the server's keep
+set — outstanding requests, claimed merge-window rows, busy workers —
+and never one with an un-acked pending downlink) down to
+``max_resident_links``.  Evicting a link discards its codec state; on
+re-contact ``link()`` builds a fresh one and correctness degrades
+gracefully rather than breaking:
+
+  * private ack state (no registry): the fresh link has no
+    ``acked_base``, so the next dispatch takes the documented raw
+    first-contact fallback — more bytes, same bits;
+  * shared :class:`WorkerAckRegistry`: the ack state lives in the
+    registry, not the link, so it SURVIVES eviction and the next
+    dispatch resumes delta encoding against the worker's true base;
+  * uplink EF residual: dropped with the link.  That loses pending
+    error-feedback mass exactly as a worker death does (the books
+    record it; the chaos auditor's EF-closure invariant only inspects
+    resident links), which is why ``lru_evict`` prefers long-idle
+    links — their residual is stale speculation about a worker the
+    selector stopped picking.
+
+Eviction counts land on ``Transport.total_link_evictions``.
 """
 from __future__ import annotations
 
@@ -169,10 +198,13 @@ CODECS: Dict[str, CodecSpec] = {
 }
 
 
-@dataclass
+@dataclass(slots=True)
 class Payload:
     """Envelope for one wire transfer: codec-specific device data plus the
-    exact number of bytes the transfer costs on the link."""
+    exact number of bytes the transfer costs on the link.  Slotted: a
+    massive-scale round allocates one of these per transfer, and the
+    slot layout drops the per-instance dict (measured in
+    ``benchmarks/scale_bench.py``)."""
     codec: str
     wire_bytes: int
     data: object
@@ -482,6 +514,12 @@ def transmit(loop, link: "Link", payload: Payload, t_tx: float,
     aud = t.audit
     ch = link.channel()
     seq = ch.next_seq()
+    # the pending ack-timeout handle: the first delivery cancels it, so a
+    # large lossy fleet's heap holds live timers for IN-FLIGHT payloads
+    # only, not one dead entry per delivered payload (the cancelled event
+    # never fires, which is exactly what the `seq in ch.delivered` guard
+    # made it do — event-order identical, minus the no-op pops)
+    timer = [None]
 
     def _arrive():
         if seq in ch.delivered:          # duplicate or late retransmit:
@@ -489,6 +527,9 @@ def transmit(loop, link: "Link", payload: Payload, t_tx: float,
                 aud.note_dup(direction)
             return
         ch.delivered.add(seq)            # doubles as the (instant) ack
+        if timer[0] is not None:
+            loop.cancel(timer[0])
+            timer[0] = None
         if aud is not None:
             aud.note_delivered(direction, payload.wire_bytes)
         deliver()
@@ -505,10 +546,12 @@ def transmit(loop, link: "Link", payload: Payload, t_tx: float,
             if duped:                    # network-level duplicate, late
                 loop.schedule(rel.dup_delay * t_tx, _arrive)
         if attempt + 1 < rel.max_attempts:
-            loop.schedule(link.rto(payload.wire_bytes, t_tx, attempt),
-                          lambda: _check(attempt))
+            timer[0] = loop.schedule(
+                link.rto(payload.wire_bytes, t_tx, attempt),
+                lambda: _check(attempt))
 
     def _check(attempt: int):
+        timer[0] = None
         if seq in ch.delivered or t.closed:   # acked, or the sender died
             return                            # — retransmit timer dies
         _send(attempt + 1)
@@ -537,7 +580,16 @@ class Link:
     :class:`WorkerAckState` — private per link by default, shared across
     servers when the transports were built with one
     :class:`WorkerAckRegistry`.
+
+    Slotted for massive-scale populations (one Link per contacted
+    worker); the ``__dict__`` slot keeps the instance dict availably
+    lazy — it costs one pointer until something (a test spy, say)
+    actually assigns an ad-hoc attribute.
     """
+
+    __slots__ = ("t", "worker_id", "tx_base", "residual", "_ack",
+                 "_pending_down", "_reliability", "_chan",
+                 "__dict__", "__weakref__")
 
     def __init__(self, transport: "Transport",
                  ack: Optional[WorkerAckState] = None,
@@ -849,7 +901,11 @@ class Transport:
             self.raw_bytes = self.bundle.raw_bytes
         else:
             raise ValueError("non-packable template needs raw_bytes")
+        # insertion/access-ordered (dicts preserve order; link() re-inserts
+        # on hit), so iteration order IS least-recently-used order — what
+        # lru_evict walks
         self._links: Dict[str, Link] = {}
+        self.total_link_evictions = 0
         # lossy-channel model (None = perfect wire, the default);
         # runtime/faults injects these per tier
         self.reliability: Optional[LinkReliability] = None
@@ -897,7 +953,35 @@ class Transport:
             ack = (self._ack_registry.state(worker_id)
                    if self._ack_registry is not None else None)
             l = self._links[worker_id] = Link(self, ack, worker_id)
+        else:
+            # move-to-end: keep dict order == recency order for lru_evict
+            del self._links[worker_id]
+            self._links[worker_id] = l
         return l
+
+    def lru_evict(self, keep=(), max_links: Optional[int] = None) -> int:
+        """Evict least-recently-used QUIESCENT links until at most
+        ``max_links`` remain; returns how many were dropped.
+
+        Only quiescent links are candidates: anything in ``keep`` (the
+        server passes its outstanding/busy/windowed workers) or with a
+        pending downlink awaiting ack is skipped — evicting those would
+        lose in-flight codec state.  See the module docstring ("Lazy link
+        lifecycle") for what eviction costs on re-contact."""
+        if max_links is None or len(self._links) <= max_links:
+            return 0
+        evicted = 0
+        keep = set(keep)
+        for wid in list(self._links):
+            if len(self._links) <= max_links:
+                break
+            l = self._links[wid]
+            if wid in keep or l._pending_down is not None:
+                continue
+            del self._links[wid]
+            evicted += 1
+        self.total_link_evictions += evicted
+        return evicted
 
     # --- expected costs (selection time budgets / straggler timeouts) ---
     def _retx_factor(self) -> float:

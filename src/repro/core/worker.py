@@ -33,6 +33,13 @@ class TrainResult:
 
 
 class FLWorker:
+    # slotted: a massive-scale population instantiates one of these per
+    # worker up front, and the fixed layout roughly halves the per-object
+    # footprint (measured in benchmarks/scale_bench.py)
+    __slots__ = ("worker_id", "address", "profile", "data", "train_fn",
+                 "loop", "warehouse", "server_pointers", "_inflight",
+                 "_fetching", "busy", "_per_batch_time")
+
     def __init__(self, worker_id: str, *, profile: WorkerProfile,
                  data: Dict, train_fn: Callable, loop: EventLoop,
                  per_batch_time: Optional[float] = None):

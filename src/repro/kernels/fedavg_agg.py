@@ -8,6 +8,14 @@ chain and no intermediate materialisation.
 
 Block: (W, 512) f32 tiles (W workers is small: 2..32), 128-lane aligned.
 
+The same fused contraction serves the massive-scale cohort row window
+(``flatbuf.FlatServerState.merge_window``): there W is the WINDOW
+capacity (O(cohort), not the population), each in-flight update owns a
+claimed row, and the per-update weight is scattered to its row index in
+the weight vector — stale/free rows sit zeroed at weight 0, which
+contributes nothing to the dot_general.  No kernel change: lane->worker
+indirection lives entirely in the weight vector.
+
 Sharded variants (``*_sharded``): the same kernels over a 1-D aggregation
 server mesh.  The packed (W, N) layout puts every worker's lane for a given
 parameter on ONE device when N is sharded, so the staleness-weighted

@@ -54,6 +54,28 @@ class FaultInjector:
                 w.profile.failed = False
         self.loop.at(t, _recover)
 
+    # --- lane-addressed chaos (massive-scale populations) ---
+    # Cohort-sampled servers materialize NO per-worker state (no link, no
+    # events) for workers outside past cohorts, so the chaos layer kills
+    # by population LANE — a stable integer handle every adopted worker
+    # has from round 0 — rather than requiring an object to exist.  The
+    # lane resolves to a worker id at FIRE time: whichever profile holds
+    # the lane then (elastic re-adoption) is the one that dies.
+
+    def kill_lane_at(self, t: float, lane: int):
+        def _kill():
+            pop = self.server.population
+            if pop is not None and 0 <= lane < len(pop):
+                pop.profile(lane).failed = True
+        self.loop.at(t, _kill)
+
+    def recover_lane_at(self, t: float, lane: int):
+        def _recover():
+            pop = self.server.population
+            if pop is not None and 0 <= lane < len(pop):
+                pop.profile(lane).failed = False
+        self.loop.at(t, _recover)
+
 
 @dataclass
 class ElasticPool:
