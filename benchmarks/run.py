@@ -18,8 +18,8 @@ def main() -> None:
 
     # CI smoke dispatch: run exactly one tiny sweep and exit (the full
     # table below is the local/nightly path).  One entry point per flag:
-    # --smoke-dlink lives in fl_figures.py's __main__, --smoke-topology,
-    # --smoke-chaos and --smoke-scale here
+    # --smoke-dlink lives in fl_figures.py's __main__; --smoke-topology,
+    # --smoke-chaos, --smoke-scale and --smoke-autotune here
     if "--smoke-topology" in sys.argv:
         print(json.dumps(fl_figures.fig_topology_sweep(smoke=True),
                          indent=2))
@@ -30,6 +30,10 @@ def main() -> None:
         return
     if "--smoke-scale" in sys.argv:
         scale_bench.main(smoke=True)
+        return
+    if "--smoke-autotune" in sys.argv:
+        print(json.dumps(fl_figures.fig_autotune_sweep(smoke=True),
+                         indent=2))
         return
 
     # the full sweep tolerates any one bench dying (e.g. an optional dep

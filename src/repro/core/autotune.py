@@ -1,0 +1,194 @@
+"""Self-tuning transport: per-link codec/frac selection from measured state.
+
+The codec registry (``core/transport.py``) prices every codec's wire bytes
+exactly, and the estimator (``core/estimator.py``) measures every link's
+bandwidth from delivered transfers — so the transport can pick the codec
+*per link* instead of shipping one hand-picked constant for the whole
+federation.  FLight (arXiv:2308.02834) motivates the asymmetry this closes:
+a backbone server<->server link moves a full model in microseconds and
+compression only buys encode latency, while a starved edge uplink is
+dominated by bytes on the wire.  One ``transport="auto"`` config should
+therefore resolve to ``raw`` on the backbone and ``topk_ef(+int8)`` on the
+edge without per-tier tuning.
+
+Choice rule (evaluated at every encode, per link):
+
+    argmin_codec  expected_codec_bytes(codec, frac) * retx_factor
+                  / measured_bandwidth  +  encode_cost(codec)
+
+where ``retx_factor`` is the transport's geometric ``1/(1-drop_p)``
+retransmit tax (lossy links inflate the byte term, never the compute
+term) and ``encode_cost`` is a per-parameter compute model: sparsifying
+or quantising a million-parameter delta is not free, which is exactly why
+a fat link prefers ``raw``.  Simulated wire time charges bytes only; the
+encode-cost term steers the *choice* the way a real deployment's encode
+latency would.
+
+Feedback schedule (driven from ``HistoryPoint`` via
+``Transport.note_round``): warmup is *structural* — every link's first
+contact ships dense anyway, because an unmeasured link prices to ``raw``
+and a base-less delta falls back to ``raw``, and that very dispatch seeds
+both the acked base and (one round later) the bandwidth measurement.
+``warmup_rounds`` forces *extra* dense rounds on top — the DGC (Deep
+Gradient Compression, arXiv:1712.01887) dense-warmup trick — and defaults
+to 0: a round of raw on a starved edge link costs ~18x the compressed
+bytes, which is real t80, while the convergence benefit of one extra
+dense round is noise.  After warmup the top-k fraction starts at
+``fracs[0]`` and tightens one rung every time accuracy plateaus (gain
+below ``plateau_eps`` for ``plateau_window`` consecutive rounds): loose
+sparsity while accuracy is moving, aggressive sparsity once rounds stop
+paying for their bytes.
+
+The tuner owns no transport state; :class:`repro.core.transport.Transport`
+consults it at encode time (``resolve_up``/``resolve_down``) and for its
+selection-facing byte estimates (``expected_up_bytes`` & co., which is how
+``BytesSpec`` callables become time-varying under auto mode).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
+
+# codecs the tuner may resolve to, cheapest-compute first: the argmin
+# tie-break prefers the earlier entry, so equal-latency candidates fall
+# back toward less codec machinery
+_CANDIDATES = ("raw", "delta", "int8", "topk_ef", "topk_ef+int8")
+
+
+@dataclass(frozen=True)
+class AutoPolicy:
+    """Static knobs of the auto codec mode (one policy per transport).
+
+    The encode-cost coefficients are seconds per parameter per codec
+    stage, CPU-scale by default: packing/delta-ing a contiguous f32
+    vector streams at memory bandwidth (~1 ns/param), a top-k threshold
+    pass costs a few comparisons per element (~8 ns/param), int8
+    quantisation one multiply/round (~2 ns/param).  They only steer
+    *choice* — simulated transfer time stays bytes/bandwidth."""
+    warmup_rounds: int = 0            # FORCED dense rounds beyond the
+    # structural warmup (first contact is raw regardless: no base, no
+    # measurement).  Raise for DGC-style dense warmup epochs
+    # the top-k ladder starts at the registry's default frac (0.1, the
+    # hand-picked setting every fixed-codec benchmark uses) so steady-
+    # state auto never pays MORE bytes than the tuned baseline, then
+    # tightens DGC-ward once accuracy genuinely plateaus.  The trigger is
+    # deliberately conservative (3 consecutive sub-1e-3 rounds): per-round
+    # accuracy is noisy, and tightening on a fluctuation trades real
+    # convergence speed for bytes that no longer dominate the round
+    fracs: Tuple[float, ...] = (0.1, 0.05)
+    plateau_eps: float = 1e-3         # accuracy gain counted as "moving"
+    plateau_window: int = 3           # consecutive flat rounds per rung
+    cost_pack: float = 1e-9           # s/param: pack + dense delta
+    cost_topk: float = 8e-9           # s/param: threshold + sparsify pass
+    cost_quant: float = 2e-9          # s/param: int8 quantise
+
+
+class AutoTuner:
+    """Per-transport codec/frac chooser.
+
+    ``bind_bandwidth`` supplies the measured-bandwidth sources: a
+    per-link callable (worker/leaf id -> bytes/s, or None when nothing is
+    known) and an optional representative callable for transport-wide
+    byte estimates (selection budgets price one scalar per round).
+    Callers layer these measured-else-nominal: FogBus2-style registration
+    advertises every link's nominal rate up front, so the first dispatch
+    can already pick the regime's codec, and the estimator's measurement
+    replaces the prior after the first delivered round.  A link with no
+    rate from either source resolves to ``raw`` — dense is always
+    decodable and the very transfer it prices becomes the link's first
+    measurement."""
+
+    def __init__(self, n_params: int, raw_bytes: int,
+                 policy: Optional[AutoPolicy] = None):
+        self.n_params = int(n_params)
+        self.raw_bytes = int(raw_bytes)
+        self.policy = policy or AutoPolicy()
+        self.rounds = 0               # HistoryPoint feedback count
+        self._frac_i = 0              # rung on the policy's frac ladder
+        self._flat_streak = 0         # consecutive plateau rounds
+        self._last_acc: Optional[float] = None
+        self._bw_of: Optional[Callable[[str], Optional[float]]] = None
+        self._rep_bw: Optional[Callable[[], Optional[float]]] = None
+
+    # --- bandwidth sources ---
+    def bind_bandwidth(self, per_link: Callable[[str], Optional[float]],
+                       representative: Optional[Callable[[], Optional[float]]]
+                       = None) -> None:
+        self._bw_of = per_link
+        self._rep_bw = representative
+
+    # --- feedback schedule (HistoryPoint-driven) ---
+    @property
+    def frac(self) -> float:
+        return self.policy.fracs[self._frac_i]
+
+    @property
+    def warming_up(self) -> bool:
+        return self.rounds < self.policy.warmup_rounds
+
+    def note_round(self, accuracy: float) -> None:
+        """One aggregation round closed at ``accuracy``: advance the
+        warmup counter and tighten the top-k rung when accuracy has been
+        flat for ``plateau_window`` consecutive rounds."""
+        self.rounds += 1
+        p = self.policy
+        if self._last_acc is not None:
+            if accuracy - self._last_acc < p.plateau_eps:
+                self._flat_streak += 1
+                if (self._flat_streak >= p.plateau_window
+                        and self._frac_i + 1 < len(p.fracs)):
+                    self._frac_i += 1
+                    self._flat_streak = 0
+            else:
+                self._flat_streak = 0
+        self._last_acc = accuracy
+
+    # --- the pricing rule ---
+    def codec_bytes(self, name: str, frac: float) -> int:
+        from .transport import CODECS, expected_codec_bytes
+        return expected_codec_bytes(CODECS[name], self.n_params,
+                                    self.raw_bytes, frac)
+
+    def encode_cost(self, name: str) -> float:
+        from .transport import CODECS
+        spec = CODECS[name]
+        if not spec.delta:
+            return 0.0                # raw ships the tree untouched
+        p = self.policy
+        per_param = p.cost_pack
+        if spec.topk:
+            per_param += p.cost_topk
+        if spec.quantize:
+            per_param += p.cost_quant
+        return self.n_params * per_param
+
+    def expected_latency(self, name: str, frac: float, bw: float,
+                         retx: float) -> float:
+        """Expected one-transfer seconds of ``name`` on a ``bw`` bytes/s
+        link with retransmit tax ``retx`` — the quantity the argmin
+        minimises (also what ``fig_autotune_sweep`` reports per tier)."""
+        return (self.codec_bytes(name, frac) * retx / max(bw, 1.0)
+                + self.encode_cost(name))
+
+    def choose_for(self, bw: Optional[float], retx: float = 1.0
+                   ) -> Tuple[str, float]:
+        """(codec name, frac) minimising expected transfer latency at
+        ``bw``; dense warmup and unmeasured links resolve to raw."""
+        frac = self.frac
+        if self.warming_up or not bw:
+            return "raw", frac
+        best = min(_CANDIDATES,
+                   key=lambda n: self.expected_latency(n, frac, bw, retx))
+        return best, frac
+
+    def choose(self, worker_id: str, retx: float = 1.0) -> Tuple[str, float]:
+        bw = self._bw_of(worker_id) if self._bw_of is not None else None
+        return self.choose_for(bw, retx)
+
+    def steady_choice(self, retx: float = 1.0) -> Tuple[str, float]:
+        """The transport-wide choice (selection budgets price one scalar
+        per round): the per-link rule evaluated at the representative
+        bandwidth.  Time-varying by construction — raw during warmup,
+        then the current rung of the frac ladder."""
+        bw = self._rep_bw() if self._rep_bw is not None else None
+        return self.choose_for(bw, retx)

@@ -135,6 +135,15 @@ class TimeEstimator:
         t_meas, bytes_meas = m
         return bytes_meas / max(t_meas, 1e-12)
 
+    def median_bandwidth(self) -> Optional[float]:
+        """Median measured bytes/s across all observed workers, or None
+        before any observation — the transport-wide representative rate
+        the auto codec tuner prices selection byte estimates at."""
+        if not self._measured_tx:
+            return None
+        rates = [b / max(t, 1e-12) for t, b in self._measured_tx.values()]
+        return float(np.median(rates))
+
     # --- measurement feedback (thesis: 'after any worker ... the actual
     # time consumed for communication and training is updated') ---
     def observe_training(self, worker_id: str, t_one_measured: float):
@@ -144,6 +153,15 @@ class TimeEstimator:
 
     def observe_transmit(self, worker_id: str, t_tx_measured: float,
                          n_bytes: int):
+        """Record one bandwidth sample: the *delivered copy's* wire time
+        for ``n_bytes``.  Contract: callers must pass the one-transmission
+        channel time (``bytes / profile.bandwidth``), never ack-to-ack
+        wall time — on a lossy link the latter includes retransmit backoff
+        waits and would poison every downstream pricing (selection
+        budgets, straggler timeouts, RTOs, auto codec choice) by the
+        ``1/(1-p)``-with-backoff factor.  The retransmit tax is priced
+        separately and explicitly via ``Transport._retx_factor``.  Pinned
+        by the chaos-tier regression in tests/test_chaos.py."""
         self._measured_tx[worker_id] = (t_tx_measured, int(n_bytes))
         if self._pop is not None:
             self._pop.note_tx(worker_id, t_tx_measured, int(n_bytes))

@@ -212,6 +212,26 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
     tr = Transport(setup.weights0, codec=transport,
                    down_codec=transport_down, frac=transport_frac,
                    raw_bytes=setup.model_bytes, mesh=mesh)
+    if tr.tuner is not None:
+        # auto mode: per-link choices price the estimator's measured
+        # bandwidth, seeded by each profile's advertised nominal rate
+        # (FogBus2 registration publishes link capability up front, so
+        # the very first uplink already picks the regime's codec); the
+        # measurement replaces the prior once the first round delivers.
+        # Transport-wide byte estimates price the median the same way
+        nominal = {p.worker_id: float(p.bandwidth) for p in setup.profiles}
+        nominal_rep = (sorted(nominal.values())[len(nominal) // 2]
+                       if nominal else None)
+
+        def _bw_of(wid, _n=nominal):
+            m = est.bandwidth(wid)
+            return m if m is not None else _n.get(wid)
+
+        def _rep_bw(_r=nominal_rep):
+            m = est.median_bandwidth()
+            return m if m is not None else _r
+
+        tr.tuner.bind_bandwidth(_bw_of, _rep_bw)
     sel = make_selector(selector, est, tr.expected_oneway_bytes,
                         **(selector_kw or {}))
     server = AggregationServer(

@@ -6,8 +6,8 @@ Algorithm 1 — R-min/R-max:
     T_minimum = min_w T_max_w
     selected = { w : T_min_w <= T_minimum }
   with post-round updates (eqs 3.1/3.2):
-    rmin *= (acc_n + 1) / (acc_{n-1} + 1)       # shrinks as accuracy grows
-    rmax *= (acc_{n-1} + 1) / (acc_n + 1)^{-1}  # i.e. grows as accuracy grows
+    rmin *= (acc_{n-1} + 1) / (acc_n + 1)       # shrinks as accuracy grows
+    rmax *= (acc_n + 1) / (acc_{n-1} + 1)       # grows as accuracy grows
 
   (the thesis text: decreasing rmin while increasing rmax lets slow workers
   join as training progresses; mis-initialisation stalls training — fig 4.5 —
@@ -40,6 +40,22 @@ BytesSpec = Union[int, Callable[[], int]]
 
 def _resolve_bytes(model_bytes: BytesSpec) -> int:
     return int(model_bytes()) if callable(model_bytes) else int(model_bytes)
+
+
+def _note_scores(workers, scores: Dict[str, float]) -> None:
+    """Mirror per-object eq-3.4 prices into any bound population ``score``
+    lane — the per-object fallback paths must leave the lanes exactly as
+    the vectorized paths would, or the lanes go stale whenever a caller
+    hands the selector a plain profile list (parity pinned in
+    tests/test_scale.py)."""
+    for w in workers:
+        s = scores.get(w.worker_id)
+        if s is None:
+            continue
+        for ref, lane in w.__dict__.get("_bindings", ()):
+            pop = ref()
+            if pop is not None:
+                pop.score[lane] = s
 
 
 def _alive_ids(workers) -> List[str]:
@@ -95,8 +111,14 @@ class RMinRMaxSelector(Selector):
         self.rmin = float(rmin)
         self.rmax = float(rmax)
         self._last_acc = 0.0
+        self._pending_bytes = None    # BytesSpec resolved at last select
 
     def select(self, workers):
+        # one BytesSpec resolution per select, pinned on the instance so
+        # round-end re-pricing can never see different bytes than the
+        # select that produced the round (a time-varying BytesSpec — the
+        # auto codec's expected_oneway_bytes — may change between calls)
+        nbytes = self._pending_bytes = _resolve_bytes(self.model_bytes)
         view = as_view(workers)
         if view is not None:
             # fused vector pass: eq 3.4 priced for every alive lane at
@@ -105,7 +127,6 @@ class RMinRMaxSelector(Selector):
             alive = view.where(view.alive_mask())
             if not len(alive):
                 return []
-            nbytes = _resolve_bytes(self.model_bytes)
             t_one = self.est.t_one_vec(alive)
             t_tx = self.est.t_transmit_vec(alive, nbytes)
             t_min = t_one * self.rmin + t_tx
@@ -115,12 +136,12 @@ class RMinRMaxSelector(Selector):
         alive = [w for w in workers if not w.failed]
         if not alive:
             return []
-        nbytes = _resolve_bytes(self.model_bytes)
         t_min = {w.worker_id: self.est.t_one(w) * self.rmin +
                  self.est.t_transmit(w, nbytes) for w in alive}
         t_max = {w.worker_id: self.est.t_one(w) * self.rmax +
                  self.est.t_transmit(w, nbytes) for w in alive}
-        t_minimum = min(t_max.values())
+        _note_scores(alive, t_min)       # lane/object parity with the
+        t_minimum = min(t_max.values())  # vector path's score write
         return [w.worker_id for w in alive if t_min[w.worker_id] <= t_minimum]
 
     def on_round_end(self, accuracy):  # eqs 3.1 / 3.2
@@ -143,20 +164,26 @@ class TimeBasedSelector(Selector):
         self.A = accuracy_threshold
         self._last_acc = 0.0
         self._last_selected: List[str] = []
+        self._pending_bytes = None    # BytesSpec resolved at last select
 
-    def _t_total(self, w: WorkerProfile) -> float:
-        return self.est.t_one(w) * self.r + \
-            self.est.t_transmit(w, _resolve_bytes(self.model_bytes))
+    def _t_total(self, w: WorkerProfile, nbytes: int) -> float:
+        return self.est.t_one(w) * self.r + self.est.t_transmit(w, nbytes)
 
-    def _t_total_vec(self, view) -> np.ndarray:
+    def _t_total_vec(self, view, nbytes: int) -> np.ndarray:
         return self.est.t_one_vec(view) * self.r + \
-            self.est.t_transmit_vec(view, _resolve_bytes(self.model_bytes))
+            self.est.t_transmit_vec(view, nbytes)
 
     def select(self, workers):
+        # resolve the BytesSpec ONCE per select and pin it: the eq-3.3
+        # round-end raise must price against the same bytes as the select
+        # that produced ``_pending`` — re-resolving there would let a
+        # time-varying BytesSpec (the auto codec's schedule) admit against
+        # one byte count and raise the budget against another
+        nbytes = self._pending_bytes = _resolve_bytes(self.model_bytes)
         view = as_view(workers)
         if view is not None:
             alive = view.where(view.alive_mask())
-            t_total = self._t_total_vec(alive)
+            t_total = self._t_total_vec(alive, nbytes)
             alive.pop.score[alive.lanes] = t_total
             selmask = t_total <= self.T
             sel = alive.ids_where(selmask)
@@ -165,7 +192,9 @@ class TimeBasedSelector(Selector):
             self._last_selected = sel
             return sel
         alive = [w for w in workers if not w.failed]
-        sel = [w.worker_id for w in alive if self._t_total(w) <= self.T]
+        t_total = {w.worker_id: self._t_total(w, nbytes) for w in alive}
+        _note_scores(alive, t_total)   # lane/object parity (vector path)
+        sel = [w.worker_id for w in alive if t_total[w.worker_id] <= self.T]
         self._pending = alive
         self._pending_selmask = None
         self._last_selected = sel
@@ -176,18 +205,23 @@ class TimeBasedSelector(Selector):
         if gain < self.A:
             pending = getattr(self, "_pending", [])
             selmask = getattr(self, "_pending_selmask", None)
+            # the bytes pinned by the select that produced _pending —
+            # NEVER re-resolved here (see select)
+            nbytes = self._pending_bytes
+            if nbytes is None:
+                nbytes = _resolve_bytes(self.model_bytes)
             if selmask is not None:
                 # same eq-3.3 raise, fused: re-price the not-selected
                 # lanes with the estimator's CURRENT measurements (the
                 # scalar path recomputes _t_total at round end too)
                 if not np.all(selmask):
-                    self.T = float(
-                        np.min(self._t_total_vec(pending.where(~selmask))))
+                    self.T = float(np.min(
+                        self._t_total_vec(pending.where(~selmask), nbytes)))
             else:
                 not_sel = [w for w in pending
                            if w.worker_id not in self._last_selected]
                 if not_sel:
-                    self.T = min(self._t_total(w) for w in not_sel)
+                    self.T = min(self._t_total(w, nbytes) for w in not_sel)
         self._last_acc = accuracy
 
 

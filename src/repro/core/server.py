@@ -281,6 +281,7 @@ class AggregationServer:
                                              0, 0, self.total_up_bytes,
                                              self.total_down_bytes,
                                              self.transport.total_retransmits))
+            self.transport.note_round(self.history[-1])
             self.version += 1
             self.loop.schedule(1e-3, self._dispatch_round)
             return
@@ -532,6 +533,9 @@ class AggregationServer:
                                          n_upd, n_upd, self.total_up_bytes,
                                          self.total_down_bytes,
                                          self.transport.total_retransmits))
+        # HistoryPoint feedback to the auto codec tuner (no-op when a
+        # fixed codec is configured — tuner is None)
+        self.transport.note_round(self.history[-1])
         if self.target_accuracy is not None and acc >= self.target_accuracy:
             self._finish()
         elif self.version >= self.max_rounds:

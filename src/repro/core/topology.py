@@ -230,6 +230,7 @@ class Topology:
                 down_codec=config.server_codec_down,
                 frac=config.server_frac, raw_bytes=model_bytes, mesh=mesh,
                 ack_registry=self._server_acks)
+            self._bind_tuner(self.transport)
             # same fast-path/fallback rules as the leaf servers, shared
             # helpers so the tiers can never drift apart
             self._flat = flatbuf.flat_state_for(weights, mesh=mesh)
@@ -241,6 +242,28 @@ class Topology:
             HistoryPoint(0.0, 0, float(eval_fn(weights)), 0, 0)]
 
     # --- wiring ---
+    def _bind_tuner(self, tr) -> None:
+        """Bandwidth sources for a ``server_codec="auto"`` backbone: the
+        server<->server link rates are *configured* per leaf, so the tuner
+        prices them directly — on a fat backbone (~1e9 B/s) the encode
+        cost dominates the byte savings and the pricing rule resolves
+        raw, while a constrained backbone still compresses.  No-op for
+        fixed server codecs (tuner is None)."""
+        if tr.tuner is None:
+            return
+
+        def _leaf_bw(lid):
+            lf = self.leaves.get(lid)
+            return None if lf is None else lf.bandwidth
+
+        def _rep_bw():
+            if not self.leaves:
+                return None
+            rates = sorted(lf.bandwidth for lf in self.leaves.values())
+            return rates[len(rates) // 2]
+
+        tr.tuner.bind_bandwidth(_leaf_bw, _rep_bw)
+
     def attach_leaf(self, server: AggregationServer,
                     bandwidth: Optional[float] = None) -> _Leaf:
         lid = server.name
@@ -412,6 +435,8 @@ class Topology:
                                          self.total_up_bytes,
                                          self.total_down_bytes,
                                          self.transport.total_retransmits))
+        # HistoryPoint feedback for a server_codec="auto" backbone
+        self.transport.note_round(self.history[-1])
         if ((self.target_accuracy is not None
              and acc >= self.target_accuracy)
                 or (self.cfg.root_rounds is not None
@@ -570,6 +595,13 @@ class Topology:
         tr.rel_estimator = old.rel_estimator
         tr.total_retransmits = old.total_retransmits
         tr.audit = old.audit
+        self._bind_tuner(tr)
+        if tr.tuner is not None and old.tuner is not None:
+            # the feedback schedule (warmup/plateau state) is the ROLE's,
+            # not the dead process': carry it across the rebuild
+            tr.tuner.__dict__.update(
+                {k: v for k, v in old.tuner.__dict__.items()
+                 if k not in ("_bw_of", "_rep_bw")})
         self.transport = tr
         self._use_vec = agg.use_flat_vec(self._flat, tr,
                                          self.cfg.root_aggregator)
@@ -679,6 +711,26 @@ def build_topology(setup, *, topology, mode: str = "sync",
     ests = [TimeEstimator(server_freq=server_freq,
                           t_onebatch_server=setup.per_batch_server)
             for _ in pools]
+    for tr, est, pool in zip(transports, ests, pools):
+        if tr.tuner is not None:
+            # worker-facing auto: each leaf's tuner prices its OWN
+            # estimator's measured link rates (pools are disjoint),
+            # seeded by the pool profiles' advertised nominal rates so
+            # the first uplink already picks the regime's codec
+            nominal = {setup.profiles[i].worker_id:
+                       float(setup.profiles[i].bandwidth) for i in pool}
+            rep0 = (sorted(nominal.values())[len(nominal) // 2]
+                    if nominal else None)
+
+            def _bw_of(wid, _e=est, _n=nominal):
+                m = _e.bandwidth(wid)
+                return m if m is not None else _n.get(wid)
+
+            def _rep_bw(_e=est, _r=rep0):
+                m = _e.median_bandwidth()
+                return m if m is not None else _r
+
+            tr.tuner.bind_bandwidth(_bw_of, _rep_bw)
     sels = make_pool_selectors(selector, ests,
                                [t.expected_oneway_bytes for t in transports],
                                **(selector_kw or {}))

@@ -33,11 +33,26 @@ kept = entries actually surviving the top-k threshold):
   topk_ef        top-k delta w/ EF              same, vs acked base ceil(n/8) + 4*kept byte-identical
   topk_ef+int8   top-k + int8 on kept values    same, vs acked base ceil(n/8) + 4      byte-identical
                                                                       + kept
+  auto           per-link: whichever row above  per-link, same rule the chosen row's   byte-identical
+                 minimises expected latency                         cost per dispatch
   ============== ============================== =================== ================== ===============
 
 (The bitmap term ``ceil(n/8)`` is the kept-coordinate indicator; quantised
 codecs add one 4-byte per-update scale; payload values cost ``kept *
-itemsize``.)  All compressed codecs encode *deltas*, never raw weights, so
+itemsize``.)  ``auto`` is not a codec but a per-dispatch *resolver*
+(``core/autotune.py``): at every encode the link picks the concrete row
+minimising ``expected_codec_bytes * retx_factor / measured_bandwidth +
+encode_cost`` — raw on fat backbone links, sparsified on starved edge
+links — pricing the advertised nominal rate until the estimator's first
+measurement replaces it, with an optional forced dense warmup
+(``AutoPolicy.warmup_rounds``) and a top-k frac that tightens as
+accuracy plateaus (fed back per round via :meth:`Transport.note_round`).
+Every payload carries the codec id it was actually encoded with, and ALL
+decode/EF/ack paths resolve their spec from the payload — never from the
+link's configured default — so a link can interleave raw, delta and top-k
+dispatches without desynchronising; with a fixed codec configured the
+payload codec always equals the configured one and every path is
+bit-identical to the pre-auto behaviour (pinned by the golden histories).  All compressed codecs encode *deltas*, never raw weights, so
 the reconstruction error contracts under error feedback.  Each direction
 keeps its own per-link EF residual — with one crucial asymmetry.  The
 uplink compresses ``delta + residual`` (the worker's base is reset by
@@ -51,6 +66,17 @@ twice per dispatch and diverge.  For the EF codecs the downlink
 post-fetch deficit): real error-feedback memory for accounting and
 tests, never re-added to the input; non-EF codecs (``delta``/``int8``)
 carry no residual memory in either direction, per ``CodecSpec.ef``.
+
+Auto mode may switch a link's uplink codec between dispatches, so the EF
+residual must survive the seams: a ``delta``/``int8`` dispatch folds any
+carried residual into its encoded delta (``delta`` delivers it exactly,
+``int8`` up to quantisation — then the memory ends, per non-EF
+semantics), while a ``raw`` dispatch ships absolute weights that cannot
+carry residual mass, so the residual is simply kept for the next
+compressed dispatch.  Each such seam snapshots the pre-encode residual
+per payload, so a cancelled dispatch restores the carried mass exactly
+(``restore_uplink``).  With a fixed codec none of this triggers: the
+residual is ``None`` on non-EF codecs and the fold is the identity.
 
 Downlink ack protocol.  A delta downlink is only decodable if the worker
 still holds the base it was encoded against, so each :class:`Link` tracks
@@ -196,6 +222,14 @@ CODECS: Dict[str, CodecSpec] = {
     "topk_ef+int8": CodecSpec("topk_ef+int8", delta=True, topk=True,
                               quantize=True, ef=True),
 }
+
+# the ``auto`` direction-level pseudo-spec: a transport configured auto
+# must provision for the most stateful codec its tuner can resolve to —
+# packed tx_base, downlink ack protocol, EF residuals — so every
+# capability flag is True.  Deliberately NOT in CODECS: no payload ever
+# travels as "auto"; encode resolves a concrete registry row per dispatch
+# and decode reads the spec off the payload.
+AUTO_SPEC = CodecSpec("auto", delta=True, topk=True, quantize=True, ef=True)
 
 
 @dataclass(slots=True)
@@ -588,7 +622,7 @@ class Link:
     """
 
     __slots__ = ("t", "worker_id", "tx_base", "residual", "_ack",
-                 "_pending_down", "_reliability", "_chan",
+                 "_pending_down", "_up_restore", "_reliability", "_chan",
                  "__dict__", "__weakref__")
 
     def __init__(self, transport: "Transport",
@@ -602,6 +636,10 @@ class Link:
         # in-flight downlink awaiting ack:
         # (payload, revert-chain entry or None, pinned encode base or None)
         self._pending_down: Optional[tuple] = None
+        # auto-mode codec seam: (payload, pre-encode residual) of the last
+        # uplink encode that folded/parked carried EF mass, so a cancel
+        # can restore exactly what the seam consumed
+        self._up_restore: Optional[tuple] = None
         self._reliability = _REL_INHERIT   # per-link override (loopbacks)
         self._chan: Optional[_Channel] = None
 
@@ -648,28 +686,37 @@ class Link:
         return self._ack.down_residual
 
     # --- shared flat-delta codec stages ---
-    def _codec_encode(self, delta: jnp.ndarray, residual, spec: CodecSpec
-                      ) -> Tuple[Payload, object]:
-        """Encode one packed flat delta through ``spec``; returns
-        ``(payload, new_residual)``."""
+    def _codec_encode(self, delta: jnp.ndarray, residual, spec: CodecSpec,
+                      frac: Optional[float] = None) -> Tuple[Payload, object]:
+        """Encode one packed flat delta through ``spec`` at sparsity
+        ``frac`` (the transport's configured frac when None); returns
+        ``(payload, new_residual)``.  A carried residual folds into the
+        encoded quantity for every delta codec — for non-EF specs that
+        only happens at an auto-mode codec seam (fixed non-EF codecs
+        never hold one), and the returned residual is then the caller's
+        to clear: ``delta`` delivered the mass exactly, ``int8`` up to
+        quantisation, and non-EF codecs keep no memory of the deficit."""
         t = self.t
         n = t.bundle.n_params
+        if frac is None:
+            frac = t.frac
         if spec.topk:
             if residual is None:
                 residual = jnp.zeros_like(delta)
             x = delta + residual
             data, _, resid, wire = ef_topk_encode(
-                x, n_params=n, frac=t.frac, quantize=spec.quantize,
+                x, n_params=n, frac=frac, quantize=spec.quantize,
                 use_pallas=t.use_pallas, interpret=t.interpret)
             return Payload(spec.name, wire, data), \
                 (resid if spec.ef else residual)
+        x = delta if residual is None else delta + residual
         if spec.quantize:                        # int8: whole delta
-            scale = _int8_scale(delta)
+            scale = _int8_scale(x)
             q, _ = topk_quant.topk_quant_encode(
-                delta, 0.0, scale, use_pallas=t.use_pallas,
+                x, 0.0, scale, use_pallas=t.use_pallas,
                 interpret=t.interpret)
             return Payload(spec.name, n + 4, (q, scale)), residual
-        return Payload(spec.name, 4 * n, delta), residual  # dense f32
+        return Payload(spec.name, 4 * n, x), residual  # dense f32
 
     def _codec_apply(self, data, spec: CodecSpec,
                      base: jnp.ndarray) -> jnp.ndarray:
@@ -691,12 +738,20 @@ class Link:
 
     def encode_down(self, weights_tree) -> Payload:
         t = self.t
-        sd = t.spec_down
+        sd, frac = t.resolve_down(self)
         if not sd.delta:
-            if t.spec_up.delta:
+            if t.tracks_tx_base:
                 # remember the packed base so the uplink delta decodes
                 self.tx_base = t._pack_down(weights_tree)
-            return Payload("raw", t.raw_bytes, weights_tree)
+            payload = Payload("raw", t.raw_bytes, weights_tree)
+            if t.auto_down:
+                # an auto-resolved raw dispatch (warmup, backbone, or an
+                # unmeasured link) still rides the ack machinery: the
+                # fetch-complete ack establishes the base later delta
+                # dispatches encode against (touches no residual, so it
+                # joins no revert chain)
+                self._pending_down = (payload, None, None)
+            return payload
         vec = t._pack_down(weights_tree)
         if self.acked_base is None:
             # first dispatch: the worker holds no base yet -> raw fallback
@@ -715,7 +770,7 @@ class Link:
         base = self.acked_base
         delta = vec - base
         entry = self._ack.push()             # joins the revert chain
-        payload, new_res = self._codec_encode(delta, None, sd)
+        payload, new_res = self._codec_encode(delta, None, sd, frac)
         self._ack.down_residual = entry[1] = new_res
         # the worker-visible model after this fetch (== what decode_down
         # produces, same fused op on the same inputs): the uplink base
@@ -737,7 +792,10 @@ class Link:
                 and self._pending_down[0] is payload
                 and self._pending_down[2] is not None):
             base = self._pending_down[2]
-        return self._codec_apply(payload.data, self.t.spec_down, base)
+        # the payload names the codec it was actually encoded with — under
+        # auto the link default is a pseudo-spec and dispatches interleave
+        # concrete codecs, so decode must never assume the link default
+        return self._codec_apply(payload.data, CODECS[payload.codec], base)
 
     def decode_down(self, payload: Payload):
         """Payload -> weight pytree (no ack bookkeeping — raw downlinks
@@ -803,25 +861,44 @@ class Link:
     # --- uplink: worker -> server (codec'd response) ---
     def upfront_up_bytes(self) -> Optional[int]:
         """Exact uplink cost known before training, or None when the size is
-        data-dependent (top-k codecs: ``kept`` varies with threshold ties)."""
+        data-dependent (top-k codecs: ``kept`` varies with threshold ties;
+        auto: the codec itself is resolved at encode time)."""
         spec = self.t.spec_up
         if spec.topk:
             return None
         return self.t.expected_up_bytes()
 
     def encode_up(self, new_tree) -> Payload:
-        spec = self.t.spec_up
+        spec, frac = self.t.resolve_up(self)
         if not spec.delta:                       # raw: ship the tree as-is
-            return Payload(spec.name, self.t.raw_bytes, new_tree)
+            payload = Payload(spec.name, self.t.raw_bytes, new_tree)
+            if self.t.auto_up:
+                # raw ships absolute weights and cannot carry EF mass:
+                # park the residual for the next compressed dispatch
+                # (nothing consumed, so nothing to snapshot)
+                self._up_restore = None
+            return payload
         vec = self.t.bundle.pack(new_tree)
+        prev_res = self.residual
         payload, self.residual = self._codec_encode(
-            vec - self.tx_base, self.residual, spec)
+            vec - self.tx_base, prev_res, spec, frac)
+        if self.t.auto_up:
+            if not spec.ef and prev_res is not None:
+                # auto codec seam: the carried residual was folded into
+                # this exact/quantised delta, so the memory ends here —
+                # snapshot it so a cancelled dispatch restores the mass
+                self._up_restore = (payload, prev_res)
+                self.residual = None
+            else:
+                self._up_restore = None
         return payload
 
     def decode_up_vec(self, payload: Payload) -> jnp.ndarray:
         """Payload -> packed flat f32 vector of the worker's new absolute
-        weights (lands directly in the server's (W, N) row buffer)."""
-        spec = self.t.spec_up
+        weights (lands directly in the server's (W, N) row buffer).  The
+        spec comes off the payload: under auto the link default is a
+        pseudo-spec and dispatches interleave concrete codecs."""
+        spec = CODECS[payload.codec]
         if not spec.delta:
             return self.t.bundle.pack(payload.data)
         return self._codec_apply(payload.data, spec, self.tx_base)
@@ -829,7 +906,7 @@ class Link:
     def decode_up_tree(self, payload: Payload):
         """Payload -> pytree (the per-leaf reference path, kept for
         ``REPRO_AGG_PATH=tree`` parity and non-packable weight trees)."""
-        if not self.t.spec_up.delta:
+        if not CODECS[payload.codec].delta:
             return payload.data
         return self.t.bundle.unpack(self.decode_up_vec(payload))
 
@@ -840,12 +917,27 @@ class Link:
         must put its reconstruction back, or that top-k mass is silently
         lost from both the model and the error-feedback memory.  (The next
         dispatch re-bases the worker, so — unlike a cancelled downlink —
-        nothing else re-carries this mass.)"""
-        if not self.t.spec_up.ef or self.residual is None:
+        nothing else re-carries this mass.)
+
+        The spec is the PAYLOAD's: an auto link may have encoded this
+        dispatch with a different codec than its next one.  A cancelled
+        non-EF dispatch that folded carried residual at an auto codec seam
+        restores the pre-encode snapshot instead (the folded-in mass would
+        otherwise vanish with the cancelled payload)."""
+        spec = CODECS[payload.codec]
+        if self._up_restore is not None and self._up_restore[0] is payload:
+            restore = self._up_restore[1]
+            self._up_restore = None
+            if not spec.ef:
+                self.residual = restore if self.residual is None \
+                    else self.residual + restore
+                return
+        if not spec.ef:
             return
         data = payload.data
-        recon = _dequant(*data) if self.t.spec_up.quantize else data
-        self.residual = self.residual + recon
+        recon = _dequant(*data) if spec.quantize else data
+        self.residual = recon if self.residual is None \
+            else self.residual + recon
 
 
 class Transport:
@@ -866,15 +958,18 @@ class Transport:
                  down_codec: Optional[str] = None, frac: float = 0.1,
                  raw_bytes: Optional[int] = None, use_pallas=None,
                  interpret=None, mesh=None,
-                 ack_registry: Optional[WorkerAckRegistry] = None):
+                 ack_registry: Optional[WorkerAckRegistry] = None,
+                 auto_policy=None):
         if down_codec is None:
             down_codec = codec
         for c in (codec, down_codec):
-            if c not in CODECS:
+            if c not in CODECS and c != AUTO_SPEC.name:
                 raise ValueError(f"unknown codec {c!r}; "
-                                 f"have {sorted(CODECS)}")
-        self.spec_up = CODECS[codec]
-        self.spec_down = CODECS[down_codec]
+                                 f"have {sorted(CODECS) + [AUTO_SPEC.name]}")
+        self.auto_up = codec == AUTO_SPEC.name
+        self.auto_down = down_codec == AUTO_SPEC.name
+        self.spec_up = AUTO_SPEC if self.auto_up else CODECS[codec]
+        self.spec_down = AUTO_SPEC if self.auto_down else CODECS[down_codec]
         self.frac = float(frac)
         # codec stages run inside plain jit, and Pallas calls do NOT
         # auto-partition under GSPMD (only the merge kernels are
@@ -901,6 +996,15 @@ class Transport:
             self.raw_bytes = self.bundle.raw_bytes
         else:
             raise ValueError("non-packable template needs raw_bytes")
+        # auto mode: the per-link codec/frac resolver (core/autotune.py);
+        # bandwidth sources are bound by whoever owns the estimator
+        # (experiment.run_fl / topology.build_topology)
+        if self.auto_up or self.auto_down:
+            from .autotune import AutoTuner
+            self.tuner: Optional[object] = AutoTuner(
+                self.bundle.n_params, self.raw_bytes, auto_policy)
+        else:
+            self.tuner = None
         # insertion/access-ordered (dicts preserve order; link() re-inserts
         # on hit), so iteration order IS least-recently-used order — what
         # lru_evict walks
@@ -946,6 +1050,28 @@ class Transport:
         is a delta codec) — i.e. ``link.tx_base`` is the worker's fetched
         model in flat-vector form."""
         return self.spec_up.delta or self.spec_down.delta
+
+    # --- per-dispatch codec resolution (auto mode) ---
+    def resolve_up(self, link: "Link") -> Tuple[CodecSpec, float]:
+        """The concrete (spec, frac) this link's next uplink encode uses:
+        the configured constants, or the tuner's per-link choice."""
+        if not self.auto_up:
+            return self.spec_up, self.frac
+        name, frac = self.tuner.choose(link.worker_id, self._retx_factor())
+        return CODECS[name], frac
+
+    def resolve_down(self, link: "Link") -> Tuple[CodecSpec, float]:
+        if not self.auto_down:
+            return self.spec_down, self.frac
+        name, frac = self.tuner.choose(link.worker_id, self._retx_factor())
+        return CODECS[name], frac
+
+    def note_round(self, point) -> None:
+        """HistoryPoint feedback: one aggregation round closed — advance
+        the auto tuner's warmup/plateau schedule.  No-op on fixed-codec
+        transports, so every existing call site stays bit-identical."""
+        if self.tuner is not None:
+            self.tuner.note_round(point.accuracy)
 
     def link(self, worker_id: str) -> Link:
         l = self._links.get(worker_id)
@@ -997,21 +1123,33 @@ class Transport:
 
     def expected_down_bytes(self) -> int:
         """Per-dispatch downlink estimate from the down codec spec (the
-        steady state: first-contact dispatches cost ``raw_bytes``)."""
+        steady state: first-contact dispatches cost ``raw_bytes``).  Under
+        auto the tuner's steady choice prices the *current* rung of its
+        schedule — raw while no rate is known or a forced warmup lasts,
+        the compressed pick afterwards — so selection's BytesSpec
+        callables become time-varying per round."""
         if self.bundle is None:
             return int(self.raw_bytes * self._retx_factor())
-        return int(expected_codec_bytes(self.spec_down,
-                                        self.bundle.n_params,
-                                        self.raw_bytes, self.frac)
+        spec, frac = self.spec_down, self.frac
+        if self.auto_down:
+            name, frac = self.tuner.steady_choice(self._retx_factor())
+            spec = CODECS[name]
+        return int(expected_codec_bytes(spec, self.bundle.n_params,
+                                        self.raw_bytes, frac)
                    * self._retx_factor())
 
     def expected_up_bytes(self) -> int:
         """Per-response uplink estimate from the codec spec (top-k codecs:
-        assumes exactly k survivors)."""
+        assumes exactly k survivors); auto mode prices the tuner's current
+        steady choice, see :meth:`expected_down_bytes`."""
         if self.bundle is None:
             return int(self.raw_bytes * self._retx_factor())
-        return int(expected_codec_bytes(self.spec_up, self.bundle.n_params,
-                                        self.raw_bytes, self.frac)
+        spec, frac = self.spec_up, self.frac
+        if self.auto_up:
+            name, frac = self.tuner.steady_choice(self._retx_factor())
+            spec = CODECS[name]
+        return int(expected_codec_bytes(spec, self.bundle.n_params,
+                                        self.raw_bytes, frac)
                    * self._retx_factor())
 
     def expected_oneway_bytes(self) -> int:

@@ -347,9 +347,12 @@ def audit_chaos_run(topo) -> Dict[str, object]:
             assert versions == sorted(versions), \
                 f"{name}/{wid}: fetched model versions not monotone"
 
-    # 6 — delta resume after failover
+    # 6 — delta resume after failover (fixed-codec transports only: an
+    # auto backbone may legitimately re-provision raw when its pricing
+    # rule picks the dense codec for a fat server<->server link)
     if topo.failovers and topo.transport is not None \
-            and topo.transport.spec_down.delta:
+            and topo.transport.spec_down.delta \
+            and not topo.transport.auto_down:
         for lid, codec, had_base in topo.failover_dispatches:
             if had_base:
                 assert codec != "raw", \

@@ -1,0 +1,296 @@
+"""Self-tuning transport (core/autotune.py + transport="auto").
+
+Covers: the pricing rule's per-bandwidth answers (raw on fat links,
+int8 mid-band, topk_ef+int8 when starved), the DGC-style warmup and
+plateau-driven frac tightening, per-dispatch codec identity (every
+payload decodes by the codec it was actually encoded with, never the
+link default), the EF-residual seam when auto switches codec between
+dispatches (mass parked across raw, folded into non-EF codecs, restored
+on cancel), time-varying selection byte estimates, and the end-to-end
+``transport="auto"`` run including the backbone/edge asymmetry.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TABLE_4_1, make_setup, run_fl
+from repro.core import transport
+from repro.core.autotune import AutoPolicy, AutoTuner
+
+N_PARAMS = 1000
+
+
+def _model(seed, scale=1.0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    return {"a": jax.random.normal(ks[0], (30, 30)) * scale,
+            "b": jax.random.normal(ks[1], (100,)) * scale}
+
+
+def _tuner(**kw):
+    return AutoTuner(N_PARAMS, 4 * N_PARAMS, AutoPolicy(**kw))
+
+
+def _past_warmup(tu):
+    for _ in range(tu.policy.warmup_rounds):
+        tu.note_round(0.0)
+    return tu
+
+
+# ---------------- the pricing rule ----------------
+
+def test_choose_unknown_rate_resolves_raw_and_warmup_gate_forces_it():
+    tu = _tuner()
+    assert tu.choose_for(None) == ("raw", 0.1)       # nothing known
+    assert tu.choose_for(10e6)[0] != "raw"           # a rate: tuned at once
+    # forced DGC warmup rounds ship dense regardless of the known rate
+    gated = _tuner(warmup_rounds=1)
+    assert gated.choose_for(10e6) == ("raw", 0.1)
+    gated.note_round(0.0)
+    assert gated.choose_for(None) == ("raw", 0.1)    # still nothing known
+    assert gated.choose_for(10e6)[0] != "raw"
+
+
+def test_choice_follows_bandwidth_tiers():
+    """The argmin's per-bandwidth answers, pinned at three rates chosen
+    far from the break-evens: a fat backbone keeps raw (encode cost
+    dominates), mid-band picks int8, a starved edge link picks the full
+    topk_ef+int8 stack."""
+    tu = _past_warmup(_tuner())
+    assert tu.choose_for(1e10) == ("raw", 0.1)
+    assert tu.choose_for(200e6) == ("int8", 0.1)
+    assert tu.choose_for(50e6) == ("topk_ef+int8", 0.1)
+
+
+def test_loss_scaled_latency_shifts_choice():
+    """The retransmit factor multiplies the byte term only, so a lossy
+    link flips toward compression at a bandwidth where a clean link
+    still prefers raw."""
+    tu = _past_warmup(_tuner())
+    bw = 2e9
+    assert tu.choose_for(bw, retx=1.0) == ("raw", 0.1)
+    assert tu.choose_for(bw, retx=4.0)[0] != "raw"
+    # and the latency model itself: bytes scale with retx, cost doesn't
+    lat1 = tu.expected_latency("int8", 0.1, bw, 1.0)
+    lat2 = tu.expected_latency("int8", 0.1, bw, 2.0)
+    byte_term = tu.codec_bytes("int8", 0.1) / bw
+    assert lat2 - lat1 == pytest.approx(byte_term)
+
+
+def test_expected_latency_matches_registry_bytes():
+    tu = _tuner()
+    for name in ("raw", "delta", "int8", "topk_ef", "topk_ef+int8"):
+        spec = transport.CODECS[name]
+        assert tu.codec_bytes(name, 0.1) == transport.expected_codec_bytes(
+            spec, N_PARAMS, 4 * N_PARAMS, 0.1)
+        lat = tu.expected_latency(name, 0.1, 1e6, 1.0)
+        assert lat == pytest.approx(tu.codec_bytes(name, 0.1) / 1e6
+                                    + tu.encode_cost(name))
+    assert tu.encode_cost("raw") == 0.0
+
+
+# ---------------- the feedback schedule ----------------
+
+def test_frac_tightens_on_plateau_and_resets_on_gain():
+    tu = _tuner(warmup_rounds=0, plateau_eps=0.01, plateau_window=2,
+                fracs=(0.25, 0.1, 0.05))
+    tu.note_round(0.10)
+    assert tu.frac == 0.25            # first round: no previous accuracy
+    tu.note_round(0.50)               # big gain: streak stays zero
+    tu.note_round(0.501)              # flat 1/2
+    assert tu.frac == 0.25
+    tu.note_round(0.502)              # flat 2/2 -> tighten
+    assert tu.frac == 0.1
+    tu.note_round(0.60)               # gain resets the streak
+    tu.note_round(0.601)
+    assert tu.frac == 0.1
+    tu.note_round(0.602)
+    assert tu.frac == 0.05
+    tu.note_round(0.602)              # ladder exhausted: stays at the end
+    tu.note_round(0.602)
+    assert tu.frac == 0.05
+
+
+def test_transport_note_round_drives_schedule():
+    base = _model(0)
+    t = transport.Transport(base, codec="auto")
+    t.tuner.bind_bandwidth(lambda wid: 50e6)
+    t.tuner.policy = AutoPolicy(warmup_rounds=1)
+
+    class _P:
+        accuracy = 0.5
+    assert t.tuner.warming_up
+    t.note_round(_P())
+    assert not t.tuner.warming_up
+    # fixed-codec transports: note_round is a no-op (tuner is None)
+    fixed = transport.Transport(base, codec="raw")
+    assert fixed.tuner is None
+    fixed.note_round(_P())
+
+
+# ---------------- per-dispatch codec identity on the wire ----------------
+
+def test_payload_carries_codec_and_decode_honors_it():
+    """An auto link whose bandwidth changes between dispatches emits
+    different codecs back to back; every payload decodes by ITS codec,
+    never the link/transport default."""
+    bw = {"v": 50e6}
+    base = _model(0)
+    t = transport.Transport(base, codec="auto")
+    t.tuner.bind_bandwidth(lambda wid: bw["v"])
+    link = t.link("w0")
+
+    # first contact: no acked base yet, so the downlink provisions raw
+    # (and still rides the ack machinery) even though the rate is starved
+    down = link.encode_down(base)
+    assert down.codec == "raw"
+    assert link.decode_down(down) is base
+    link.complete_fetch(down)
+
+    # starved link with a known rate: the FIRST uplink already compresses
+    new = _model(2, 0.5)
+    up2 = link.encode_up(new)
+    assert up2.codec == "topk_ef+int8"
+    vec2 = link.decode_up_vec(up2)
+    assert vec2.shape == link.tx_base.shape
+
+    # fat link on the NEXT dispatch: raw again, exact roundtrip
+    bw["v"] = 1e10
+    new3 = _model(3, 0.5)
+    up3 = link.encode_up(new3)
+    assert up3.codec == "raw"
+    tree3 = t.bundle.unpack(link.decode_up_vec(up3))
+    assert all(jnp.array_equal(a, b) for a, b in
+               zip(jax.tree.leaves(tree3), jax.tree.leaves(new3)))
+
+
+def test_auto_raw_downlink_still_advances_ack():
+    """Auto-resolved raw dispatches ride the ack protocol, so the first
+    compressed downlink cuts a delta against an ACKED base instead of
+    falling back to raw."""
+    bw = {"v": 1e10}
+    base = _model(0)
+    t = transport.Transport(base, codec="auto")
+    t.tuner.bind_bandwidth(lambda wid: bw["v"])
+    link = t.link("w0")
+    d1 = link.encode_down(base)
+    assert d1.codec == "raw" and link.acked_base is None
+    link.complete_fetch(d1)
+    assert link.acked_base is not None
+    bw["v"] = 50e6
+    d2 = link.encode_down(_model(1, 0.9))
+    assert d2.codec == "topk_ef+int8"
+
+
+# ---------------- the EF seam across codec switches ----------------
+
+def _auto_link(bw_box):
+    base = _model(0)
+    t = transport.Transport(base, codec="auto", down_codec="raw")
+    t.tuner.bind_bandwidth(lambda wid: bw_box["v"])
+    link = t.link("w0")
+    link.encode_down(base)          # establishes tx_base for uplink deltas
+    return t, link
+
+
+def test_ef_residual_parked_across_raw_dispatch():
+    bw = {"v": 50e6}
+    t, link = _auto_link(bw)
+    link.encode_up(_model(1, 0.5))                 # topk_ef+int8: EF mass
+    parked = link.residual
+    assert parked is not None and float(jnp.sum(jnp.abs(parked))) > 0
+    bw["v"] = 1e10
+    up = link.encode_up(_model(2, 0.5))            # raw: can't carry EF
+    assert up.codec == "raw"
+    assert link.residual is parked                 # parked, not dropped
+
+
+def test_ef_residual_folded_into_non_ef_codec_and_restored_on_cancel():
+    bw = {"v": 50e6}
+    t, link = _auto_link(bw)
+    link.encode_up(_model(1, 0.5))
+    parked = link.residual
+    bw["v"] = 200e6                                # int8 territory
+    new = _model(2, 0.5)
+    up = link.encode_up(new)
+    assert up.codec == "int8"
+    # folded: the encoded delta is (new - base + residual) quantised
+    q, scale = up.data
+    want = t.bundle.pack(new) - link.tx_base + parked
+    err = float(jnp.max(jnp.abs(
+        q.astype(jnp.float32) * scale - want)))
+    assert err <= float(scale) * 0.51
+    assert link.residual is None                   # delivered -> consumed
+    # a cancelled dispatch must put the carried mass back
+    link.restore_uplink(up)
+    assert link.residual is parked
+
+
+# ---------------- time-varying selection pricing ----------------
+
+def test_expected_bytes_follow_schedule():
+    bw = {"v": 50e6}
+    base = _model(0)
+    t = transport.Transport(base, codec="auto")
+    raw = t.raw_bytes
+    # no rate known from any source: prices dense
+    assert t.expected_up_bytes() == raw
+    assert t.expected_oneway_bytes() == raw
+    # a bound rate prices the compressed choice immediately
+    t.tuner.bind_bandwidth(lambda wid: bw["v"], lambda: bw["v"])
+    spec = transport.CODECS["topk_ef+int8"]
+    assert t.expected_up_bytes() == transport.expected_codec_bytes(
+        spec, N_PARAMS, raw, t.tuner.frac)
+    # a forced DGC warmup round prices dense until note_round retires it
+    t.tuner.policy = AutoPolicy(warmup_rounds=1)
+    assert t.expected_up_bytes() == raw
+    t.note_round(type("P", (), {"accuracy": 0.1})())
+    assert t.expected_up_bytes() < raw
+    bw["v"] = 1e10                                 # fat link: raw again
+    assert t.expected_up_bytes() == raw
+
+
+# ---------------- end to end ----------------
+
+def test_auto_run_first_contact_dense_then_compresses():
+    setup = make_setup(TABLE_4_1["mnist_even"], seed=0, noise=0.25,
+                       batch_size=32, het="strong")
+    h = run_fl(setup, mode="sync", selector="all", epochs_per_round=2,
+               max_rounds=5, transport="auto")
+    raw = setup.model_bytes
+    n_sel = h[-1].selected or len(setup.profiles)
+    # first contact: every downlink provisions dense (no acked base yet)
+    first_down = next(p for p in h if p.down_bytes > 0)
+    assert first_down.down_bytes % raw == 0
+    # but the nominal-rate prior means uplinks compress from round one
+    first_up = next(p for p in h if p.up_bytes > 0)
+    assert 0 < first_up.up_bytes < 0.5 * raw * n_sel
+    # steady state: per-round wire bytes stay well below dense
+    per_round_up = h[-1].up_bytes - h[-2].up_bytes
+    assert 0 < per_round_up < 0.5 * raw * n_sel
+    # sanity: training still converges on something
+    assert h[-1].accuracy > h[0].accuracy
+
+
+def test_auto_backbone_picks_raw_while_edge_compresses():
+    """One global transport="auto" config: the fat server<->server
+    backbone resolves raw while the workers' edge links compress —
+    the FLight asymmetry, no per-tier tuning."""
+    setup = make_setup(TABLE_4_1["mnist_even"], seed=0, noise=0.25,
+                       batch_size=32, het="strong")
+    from repro.core.topology import parse_topology, run_fl_topology
+    res = run_fl_topology(
+        setup, topology=parse_topology("1x2", server_codec="auto",
+                                       server_bandwidth=1e11),
+        mode="sync", selector="all", epochs_per_round=2, max_rounds=4,
+        transport="auto")
+    topo = res.topology
+    # backbone: every post-warmup push/fan still resolves raw
+    name, _ = topo.transport.tuner.steady_choice()
+    assert name == "raw"
+    # edge: each leaf's tuner compresses at its measured worker rates
+    for lf in topo.leaves.values():
+        tr = lf.server.transport
+        ename, _ = tr.tuner.steady_choice()
+        assert ename != "raw"
+    assert res.root_history[-1].accuracy > res.root_history[0].accuracy

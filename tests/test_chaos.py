@@ -116,6 +116,29 @@ def test_chaos_lossy_runs_actually_retransmit():
                for h in res.leaf_histories.values())
 
 
+def test_lossy_link_bandwidth_estimate_converges_to_channel_rate():
+    """Regression (retransmit-inflated bandwidth samples): on a 20%-loss
+    link every ``observe_transmit`` sample must be the delivered copy's
+    one-transmission wire time, so the estimator's bandwidth equals the
+    channel rate EXACTLY — never rate/(1-p)-with-backoff.  A poisoned
+    estimate would compound: it feeds retransmit timeouts, eq-3.4
+    selection budgets, and the auto codec's per-link choice."""
+    res, _ = _run_chaos("1x1", "sync", {}, dict(seed=33, drop_p=0.2))
+    stats = audit_chaos_run(res.topology)
+    assert stats["retransmits"] > 0          # the lossy path really ran
+    checked = 0
+    for lf in res.topology.leaves.values():
+        srv = lf.server
+        for w in srv.workers.values():
+            bw = srv.est.bandwidth(w.worker_id)
+            if bw is None:                   # never delivered a response
+                continue
+            assert bw == pytest.approx(w.profile.bandwidth, rel=1e-12), \
+                (w.worker_id, bw, w.profile.bandwidth)
+            checked += 1
+    assert checked > 0
+
+
 def test_lossless_chaos_ledger_closes_exactly():
     """drop_p=0 still engages the full channel + ledger machinery: every
     sent payload is delivered exactly once and the books close with zero

@@ -133,6 +133,70 @@ def test_failed_workers_never_selected():
     assert "w0" not in sel.select(profs)
 
 
+class _MutatingBytes:
+    """A time-varying BytesSpec (the auto codec's expected_oneway_bytes is
+    one): every resolution returns the next value."""
+
+    def __init__(self, *values):
+        self.values = list(values)
+        self.calls = 0
+
+    def __call__(self):
+        self.calls += 1
+        v = self.values[0]
+        if len(self.values) > 1:
+            self.values.pop(0)
+        return v
+
+
+def test_alg2_round_end_prices_bytes_pinned_at_select():
+    """Regression (stale-BytesSpec re-pricing): the eq-3.3 budget raise
+    must price the SAME bytes as the select that produced the pending
+    set.  Pre-fix, _t_total re-resolved the BytesSpec inside
+    on_round_end, so a spec that mutated between the calls raised T
+    against bytes no select ever saw."""
+    est = TimeEstimator()
+    profs = _profiles([3.0])
+    profs[0].bandwidth = 1e3            # transmit term dominates
+    spec = _MutatingBytes(1000, 9_999_000)   # select sees 1000, then grows
+    sel = TimeBasedSelector(est, spec, r=0, T0=0.0, accuracy_threshold=0.01)
+    assert sel.select(profs) == []           # T=0 admits nobody
+    sel.on_round_end(0.0)                    # eq-3.3 raise
+    # the raise priced 1000 B at 1e3 B/s = 1.0 s, NOT the mutated value
+    assert sel.T == pytest.approx(1.0)
+    # and select resolved the spec exactly once for the whole round
+    assert spec.calls == 1
+
+
+def test_alg2_each_select_reresolves_the_spec():
+    """Pinning is per round, not forever: the NEXT select re-resolves
+    (that is what makes an auto transport's pricing time-varying)."""
+    est = TimeEstimator()
+    profs = _profiles([3.0])
+    profs[0].bandwidth = 1e3
+    spec = _MutatingBytes(1000, 2000)
+    sel = TimeBasedSelector(est, spec, r=0, T0=10.0)
+    assert sel.select(profs) == ["w0"]       # 1.0 s <= 10
+    assert sel.select(profs) == ["w0"]       # 2.0 s <= 10
+    assert spec.calls == 2
+
+
+def test_alg1_resolves_bytes_once_per_select():
+    """RMinRMaxSelector: one BytesSpec resolution per select, pinned on
+    the instance — t_min and t_max must price identical bytes."""
+    est = TimeEstimator()
+    profs = _profiles([3.0, 1.0])
+    spec = _MutatingBytes(1000, 2000)
+    sel = RMinRMaxSelector(est, spec, rmin=5, rmax=5)
+    sel.select(profs)
+    assert spec.calls == 1
+    assert sel._pending_bytes == 1000
+    sel.on_round_end(0.5)                    # eqs 3.1/3.2: no re-resolve
+    assert spec.calls == 1
+    sel.select(profs)
+    assert spec.calls == 2 and sel._pending_bytes == 2000
+
+
 # ---------------- warehouse / pointers ----------------
 
 def test_warehouse_roundtrip_and_tickets():

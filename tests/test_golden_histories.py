@@ -59,3 +59,29 @@ def test_history_bit_identical_to_pr2(tname, mname):
     h = run_fl(setup, epochs_per_round=EP, max_rounds=ROUNDS,
                **MODES[mname], **TRANSPORTS[tname])
     assert history_record(h) == golden
+
+
+def test_auto_transport_never_dirties_existing_fixtures():
+    """transport="auto" guard, failing LOUDLY if the auto codec machinery
+    ever perturbs a pinned fixture: (1) an auto run must not rewrite
+    tests/golden/histories.json, and (2) a pinned fixed-codec config run
+    AFTER an auto run in the same process must still be float-hex
+    bit-identical to its golden — auto state (tuner, AUTO_SPEC, the
+    per-payload codec ids) may leak into nothing the fixtures pin."""
+    before = GOLDEN.read_bytes()
+    setup = make_setup(TABLE_4_1["mnist_even"], **SETUP_KW)
+    h_auto = run_fl(setup, epochs_per_round=EP, max_rounds=ROUNDS,
+                    **MODES["sync"], transport="auto")
+    assert GOLDEN.read_bytes() == before, \
+        "an auto run rewrote tests/golden/histories.json"
+    golden = json.loads(GOLDEN.read_text())
+    for tname in ("raw", "uplink_only"):
+        setup = make_setup(TABLE_4_1["mnist_even"], **SETUP_KW)
+        h = run_fl(setup, epochs_per_round=EP, max_rounds=ROUNDS,
+                   **MODES["sync"], **TRANSPORTS[tname])
+        assert history_record(h) == golden[f"{tname}/sync"], \
+            f"auto run perturbed the pinned {tname!r} fixture"
+    # and the auto history is genuinely its own trajectory, not a silent
+    # alias of a fixture (it must diverge in bytes once compression kicks
+    # in) — if this ever matches a fixture key, the tuner never engaged
+    assert history_record(h_auto) != golden["raw/sync"]

@@ -329,3 +329,33 @@ def test_population_setattr_syncs_lanes_and_release():
     assert list(view.alive_mask()) == [False, True]
     pop.release("w0")
     assert not bool(pop.view_all().alive_mask()[pop.lane("w0")])
+
+
+@pytest.mark.parametrize("kind", ["time_based", "rmin_rmax"])
+def test_selector_fallback_writes_score_lanes(kind):
+    """Lane/object parity for the eq-3.4 ``score`` lane: the per-object
+    fallback path (selector handed a plain profile list) must leave the
+    population score lanes exactly as the vectorized path does —
+    pre-fix the fallback never wrote them, so lanes went stale whenever
+    it ran."""
+    from repro.core.estimator import TimeEstimator
+    from repro.core.selection import make_selector
+
+    def build():
+        est = TimeEstimator()
+        pop = WorkerPopulation()
+        est.bind_population(pop)
+        profs = [WorkerProfile(f"w{i}", cpu_freq=1.0 + i,
+                               bandwidth=1e6 * (i + 1), n_batches=2)
+                 for i in range(4)]
+        for p in profs:
+            pop.adopt(p)
+        sel = make_selector(kind, est, 4000, T0=1e9, rmin=2.0, rmax=4.0)
+        return pop, profs, sel
+
+    pop_v, profs_v, sel_v = build()
+    sel_v.select(pop_v.view_all())            # vectorized path
+    pop_o, profs_o, sel_o = build()
+    sel_o.select(profs_o)                     # per-object fallback
+    assert not np.any(np.isnan(pop_o.score[:4]))
+    np.testing.assert_array_equal(pop_v.score[:4], pop_o.score[:4])

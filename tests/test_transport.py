@@ -354,6 +354,64 @@ def test_expected_oneway_bytes_mean_of_directions():
     assert sym.expected_oneway_bytes() < t.expected_oneway_bytes()
 
 
+# every codec's expected bytes at N_PARAMS=1000 / frac=0.1 (raw 4000 B):
+# bitmap 125 B, k=100 kept
+_PRICE = {"raw": 4000, "delta": 4000, "int8": 1004,
+          "topk_ef": 525, "topk_ef+int8": 229}
+_PAIRINGS = [(u, d) for u in _PRICE for d in _PRICE]
+
+
+@pytest.mark.parametrize("up,down", _PAIRINGS,
+                         ids=[f"up={u}-down={d}" for u, d in _PAIRINGS])
+def test_expected_oneway_bytes_every_codec_pairing(up, down):
+    """eq-3.4 round pricing pinned for EVERY up x down codec pairing:
+    per-direction estimates follow each direction's own codec, and the
+    round-trip figure is the floor-average of the two (asymmetric pairs
+    with an odd byte sum exercise the floor)."""
+    t = transport.Transport(_model(0), codec=up, down_codec=down, frac=0.1)
+    assert t.expected_up_bytes() == _PRICE[up]
+    assert t.expected_down_bytes() == _PRICE[down]
+    assert t.expected_oneway_bytes() == (_PRICE[down] + _PRICE[up]) // 2
+
+
+def test_selection_admit_reject_every_codec_pairing():
+    """Admit/reject decisions of the eq-3.4 budget for every pairing: a
+    slow-link worker (1e5 B/s, no training data) against a budget of
+    0.025 s admits exactly the pairings whose floor-averaged one-way
+    bytes are <= 2500 — including the 2502-byte raw x int8 boundary case
+    that floor-averaging puts 2 bytes over."""
+    from repro.core.selection import TimeBasedSelector
+
+    est = TimeEstimator()
+    slow = WorkerProfile("slow", bandwidth=1e5, n_batches=0)
+    base = _model(0)
+    for (up, down) in _PAIRINGS:
+        t = transport.Transport(base, codec=up, down_codec=down, frac=0.1)
+        sel = TimeBasedSelector(est, t.expected_oneway_bytes, r=1, T0=0.025)
+        oneway = (_PRICE[down] + _PRICE[up]) // 2
+        want = ["slow"] if oneway <= 2500 else []
+        assert sel.select([slow]) == want, (up, down)
+    # and the auto mode's answers from the same budget: with no link
+    # rate known the transport prices dense and the budget rejects;
+    # binding a rate flips the estimate to the compressed choice, which
+    # admits — the time-varying BytesSpec the selectors must re-resolve
+    from repro.core.autotune import AutoPolicy
+    auto = transport.Transport(base, codec="auto")
+    sel = TimeBasedSelector(est, auto.expected_oneway_bytes, r=1, T0=0.025)
+    assert auto.expected_oneway_bytes() == 4000      # nothing known: dense
+    assert sel.select([slow]) == []
+    auto.tuner.bind_bandwidth(lambda wid: 1e5, lambda: 1e5)
+    # topk_ef+int8 at the warmest frac rung (0.1): 125 + 4 + 100
+    assert auto.expected_oneway_bytes() == 229
+    assert sel.select([slow]) == ["slow"]
+    # a forced DGC warmup round prices dense while it lasts
+    auto.tuner.policy = AutoPolicy(warmup_rounds=1)
+    assert auto.expected_oneway_bytes() == 4000
+    assert sel.select([slow]) == []
+    auto.note_round(type("P", (), {"accuracy": 0.1})())
+    assert auto.expected_oneway_bytes() == 229
+
+
 def test_selection_time_budget_prices_downlink_codec():
     """The eq-3.4 time budget must shrink when the downlink codec shrinks
     the expected bytes: a slow-link worker admitted under the symmetric
@@ -368,8 +426,10 @@ def test_selection_time_budget_prices_downlink_codec():
     t_raw = TimeBasedSelector(est, raw.expected_oneway_bytes, r=1, T0=0.0)
     t_sym = TimeBasedSelector(est, sym.expected_oneway_bytes, r=1, T0=0.0)
     # the transmit leg of the budget scales with the codec'd expected bytes
-    tt_raw = t_raw._t_total(slow) - est.t_one(slow)
-    tt_sym = t_sym._t_total(slow) - est.t_one(slow)
+    tt_raw = t_raw._t_total(slow, raw.expected_oneway_bytes()) \
+        - est.t_one(slow)
+    tt_sym = t_sym._t_total(slow, sym.expected_oneway_bytes()) \
+        - est.t_one(slow)
     assert abs(tt_raw - raw.expected_oneway_bytes() / 1e5) < 1e-9
     assert abs(tt_sym - sym.expected_oneway_bytes() / 1e5) < 1e-9
     assert tt_sym < tt_raw / 10
