@@ -533,6 +533,90 @@ def fig_autotune_sweep(smoke: bool = False):
     return {k: v for k, v in derived.items() if k.endswith("/summary")}
 
 
+def fig_resume_sweep(smoke: bool = False):
+    """Durable-federation cost sweep: kill a run at a checkpoint
+    boundary, resume it from disk, and price both halves of the
+    durability story — correctness (the stitched run must reach the
+    SAME time-to-accuracy as the uninterrupted one: simulated-time
+    parity is exact because resume is bit-faithful) and overhead
+    (snapshot size on disk and wall-clock save cost per checkpoint).
+
+    Emits ``benchmarks/results/BENCH_resume.json``; ``smoke=True`` is
+    the CI entry: fewer rounds, same artifact shape and the same hard
+    t80-parity assertion.
+    """
+    import tempfile
+
+    from repro.checkpoint import CheckpointManager
+
+    max_rounds = 6 if smoke else 60
+    every = 2
+    modes = {
+        "sync": dict(mode="sync", selector="all"),
+        "async_delta": dict(mode="async", selector="all", async_delta=True),
+    }
+    tkw = dict(transport="topk_ef+int8", transport_frac=0.1)
+
+    curves, derived = {}, {}
+    for mname, mkw in modes.items():
+        def _setup():
+            return make_setup(TABLE_4_1["mnist_even"], seed=0, **REGIME)
+
+        t0 = time.time()
+        h_full = run_fl(_setup(), epochs_per_round=EP,
+                        max_rounds=max_rounds, **mkw, **tkw)
+        t_uninterrupted = time.time() - t0
+
+        with tempfile.TemporaryDirectory() as d:
+            t0 = time.time()
+            h_part = run_fl(_setup(), epochs_per_round=EP,
+                            max_rounds=max_rounds, **mkw, **tkw,
+                            checkpoint_every=every, checkpoint_dir=d,
+                            stop_after_checkpoints=1)
+            t_killed = time.time() - t0
+            mgr = CheckpointManager(d)
+            sizes = [mgr._path(s).stat().st_size for s in mgr.steps()]
+            t0 = time.time()
+            h_res = run_fl(_setup(), epochs_per_round=EP,
+                           max_rounds=max_rounds, **mkw, **tkw,
+                           checkpoint_dir=d, resume=True)
+            t_resumed = time.time() - t0
+
+        full_rec = [(p.time.hex(), float(p.accuracy).hex()) for p in h_full]
+        res_rec = [(p.time.hex(), float(p.accuracy).hex()) for p in h_res]
+        t80_full = time_to_accuracy(h_full, 0.8)
+        t80_res = time_to_accuracy(h_res, 0.8)
+        # the acceptance gate: a killed+resumed run must be bit-identical
+        # in simulated time, so t80 parity is EXACT, not approximate
+        assert res_rec == full_rec, \
+            f"{mname}: resumed history diverged from uninterrupted run"
+        assert t80_res == t80_full, \
+            f"{mname}: t80 parity broken ({t80_res} != {t80_full})"
+
+        curves[mname] = [(p.time, p.accuracy) for p in h_res]
+        derived[mname] = {
+            "t80_uninterrupted": t80_full,
+            "t80_resumed": t80_res,
+            "t80_parity": t80_res == t80_full,
+            "rounds_before_kill": len(h_part),
+            "rounds_total": len(h_res),
+            "checkpoint_bytes": sizes,
+            "checkpoint_mib": [round(s / 2**20, 3) for s in sizes],
+            "wall_s": {"uninterrupted": round(t_uninterrupted, 3),
+                       "killed_segment": round(t_killed, 3),
+                       "resumed_segment": round(t_resumed, 3)},
+        }
+    rec = {"config": {"smoke": smoke, "max_rounds": max_rounds,
+                      "checkpoint_every": every, "frac": 0.1,
+                      "epochs_per_round": EP},
+           "curves": curves, "derived": derived}
+    BENCH_RESULTS.mkdir(parents=True, exist_ok=True)
+    (BENCH_RESULTS / "BENCH_resume.json").write_text(
+        json.dumps(rec, indent=2))
+    return {m: {k: d[k] for k in ("t80_parity", "checkpoint_mib")}
+            for m, d in derived.items()}
+
+
 ALL = {
     "fig4_1_sequential_vs_fl": fig4_1_sequential_vs_fl,
     "fig4_2_even_vs_uneven": fig4_2_even_vs_uneven,
@@ -547,6 +631,7 @@ ALL = {
     "fig_topology_sweep": fig_topology_sweep,
     "fig_chaos_sweep": fig_chaos_sweep,
     "fig_autotune_sweep": fig_autotune_sweep,
+    "fig_resume_sweep": fig_resume_sweep,
 }
 
 

@@ -1,1 +1,4 @@
 from .manager import CheckpointManager
+from .snapshot import FederationSnapshot
+
+__all__ = ["CheckpointManager", "FederationSnapshot"]

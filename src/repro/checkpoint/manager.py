@@ -2,11 +2,45 @@
 
 Fault-tolerance contract: a step-``k`` checkpoint is visible iff it was
 written completely (atomic rename); ``restore_latest`` after any crash
-resumes from the newest complete step; ``keep`` bounds disk usage.
+resumes from the newest complete step; ``keep`` bounds disk usage
+(counting only *readable* snapshots — a corrupt newest file must never
+evict the checkpoints a restore actually needs).  Stale ``*.tmp``
+staging files from saves that crashed between ``mkstemp`` and the
+atomic publish are swept on construction and before every save.
+
+Snapshot contract (:class:`repro.checkpoint.snapshot.FederationSnapshot`)
+-------------------------------------------------------------------------
+A federation snapshot **captures**: server flat buffers and row-window
+occupancy, per-link transport state (``tx_base``/``acked_base``, uplink
+and downlink EF residuals with their revert chains, lossy-channel
+RNG/sequence/delivered-set, per-link autotuner state), the shared
+``WorkerAckRegistry``, estimator measurements, population lanes,
+selection/budget state, warehouse contents and ticket tables, history
+counters, and the event-loop clock plus every pending timer as
+``(time, seq)`` records.
+
+It **re-derives** (never serializes): packed server mirrors and
+per-round pack caches (``_server_flat``/``_down_vec`` — bitwise-same
+repacks of the restored weights), population views, tuner bandwidth
+closures, jitted functions, and link objects themselves.
+
+In-flight payloads on *lossy* links are **cancelled-with-credit at
+snapshot** rather than serialized: their pending retransmit timers are
+closures over live channel state that cannot be carried across a
+process boundary, so the capture credits the encode's EF mass back,
+unlinks the downlink revert chain, revokes the ticket — all on captured
+images, never the live run — and records a re-dispatch instead.  The
+audit ledger stays closed because both sides of its inequalities only
+grow.  Reliable legs are serialized verbatim and resume bit-identically
+(deadlines are replayed as exact absolute floats).
+
+Snapshots must be saved with ``raw=True``: the default
+``tree.map(np.asarray)`` normalisation would allocate a fresh array per
+leaf and sever the shared-identity structure (payload-in-two-places,
+pinned merge bases) the restore-side ``is``-checks depend on.
 """
 from __future__ import annotations
 
-import json
 import os
 import pickle
 import tempfile
@@ -18,20 +52,39 @@ from typing import Any, Optional, Tuple
 import jax
 import numpy as np
 
+from .snapshot import FederationSnapshot  # noqa: F401  (re-export)
+
 
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        self._sweep_tmp()
 
     def _path(self, step: int) -> Path:
         return self.dir / f"ckpt_{step:012d}.pkl"
 
-    def save(self, step: int, state: Any, metadata: Optional[dict] = None):
+    def _sweep_tmp(self):
+        """Remove staging files orphaned by a crash between ``mkstemp``
+        and the atomic publish — they are invisible to restore (never
+        renamed in) but would otherwise accumulate forever."""
+        for tmp in self.dir.glob("*.tmp"):
+            try:
+                tmp.unlink()
+            except OSError:
+                pass
+
+    def save(self, step: int, state: Any, metadata: Optional[dict] = None,
+             *, raw: bool = False):
+        """Atomically publish a step-``step`` checkpoint.  ``raw=True``
+        pickles ``state`` as-is (required for ``FederationSnapshot`` —
+        see the module docstring); the default normalises array leaves
+        to host numpy first."""
+        self._sweep_tmp()
         payload = {
             "step": step,
-            "state": jax.tree.map(np.asarray, state),
+            "state": state if raw else jax.tree.map(np.asarray, state),
             "metadata": metadata or {},
             "wall_time": time.time(),
         }
@@ -49,13 +102,36 @@ class CheckpointManager:
             raise
         self._gc()
 
+    def _readable(self, path: Path) -> bool:
+        try:
+            with open(path, "rb") as f:
+                pickle.load(f)
+            return True
+        except Exception:
+            return False
+
     def _gc(self):
+        """Retain the newest ``keep`` *readable* checkpoints: walk newest
+        to oldest counting readable snapshots and delete everything
+        strictly older than the ``keep``-th — an unreadable (corrupt,
+        truncated) file never counts toward the quota, so it can never
+        evict the checkpoints a restore would actually use.
+        ``keep <= 0`` disables retention entirely (keep everything)."""
+        if self.keep <= 0:
+            return
         ckpts = sorted(self.dir.glob("ckpt_*.pkl"))
-        for old in ckpts[:-self.keep]:
-            old.unlink()
+        readable = 0
+        for i in range(len(ckpts) - 1, -1, -1):
+            if self._readable(ckpts[i]):
+                readable += 1
+                if readable >= self.keep:
+                    for old in ckpts[:i]:
+                        old.unlink()
+                    return
 
     def steps(self):
-        return sorted(int(p.stem.split("_")[1]) for p in self.dir.glob("ckpt_*.pkl"))
+        return sorted(int(p.stem.split("_")[1])
+                      for p in self.dir.glob("ckpt_*.pkl"))
 
     def restore(self, step: int) -> Tuple[int, Any, dict]:
         with open(self._path(step), "rb") as f:

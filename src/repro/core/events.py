@@ -51,6 +51,9 @@ class EventLoop:
         # with work still queued — the run is TRUNCATED, not complete,
         # and callers must not treat the history as valid
         self.exhausted = False
+        # events executed by the last run() — lets a segmented driver
+        # (checkpoint/resume) account max_events across run() calls
+        self.events_run = 0
 
     def schedule(self, delay: float, fn: Callable, *args) -> _Event:
         assert delay >= 0, delay
@@ -60,6 +63,16 @@ class EventLoop:
 
     def at(self, time: float, fn: Callable, *args) -> _Event:
         return self.schedule(max(0.0, time - self.now), fn, *args)
+
+    def schedule_abs(self, time: float, fn: Callable, *args) -> _Event:
+        """Schedule at an EXACT absolute timestamp.  ``schedule(t - now)``
+        re-derives the deadline as ``now + (t - now)``, which can differ
+        from ``t`` by an ulp; checkpoint resume replays serialized events
+        through this method so restored deadlines are bit-identical to the
+        ones the uninterrupted run would have fired."""
+        ev = _Event(max(time, self.now), next(self._seq), fn, args)
+        heapq.heappush(self._q, ev)
+        return ev
 
     def call_soon(self, fn: Callable, *args) -> _Event:
         """Run ``fn`` at the current simulated time, but AFTER the call
@@ -85,7 +98,13 @@ class EventLoop:
     def stop(self) -> None:
         self._stopped = True
 
-    def run(self, until: Optional[float] = None, max_events: int = 10_000_000):
+    def run(self, until: Optional[float] = None, max_events: int = 10_000_000,
+            break_when: Optional[Callable[[], bool]] = None):
+        """Drain the queue.  ``break_when`` (checked after every executed
+        event) returns True to pause the loop at a consistent boundary —
+        the checkpoint driver uses it to stop exactly when a round closes.
+        A paused loop is neither stopped nor exhausted; calling :meth:`run`
+        again continues from the same state."""
         n = 0
         self.exhausted = False
         while self._q and not self._stopped and n < max_events:
@@ -99,6 +118,9 @@ class EventLoop:
             self.now = ev.time
             ev.fn(*ev.args)
             n += 1
+            if break_when is not None and break_when():
+                break
         self.exhausted = bool(self._q) and not self._stopped \
             and n >= max_events
+        self.events_run = n
         return self.now

@@ -145,7 +145,14 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
            server_mesh: Optional[int] = None,
            cohort: Optional[int] = None, cohort_seed: int = 0,
            topology=None,
-           topology_kw: Optional[dict] = None) -> List[HistoryPoint]:
+           topology_kw: Optional[dict] = None,
+           max_events: int = 200_000,
+           checkpoint_every: Optional[int] = None,
+           checkpoint_dir: Optional[str] = None,
+           checkpoint_keep: int = 3,
+           resume: bool = False,
+           stop_after_checkpoints: Optional[int] = None
+           ) -> List[HistoryPoint]:
     """One end-to-end FL run; returns the server's HistoryPoint sequence.
 
     ``mode``/``selector``/``aggregator`` pick the thesis §2-3 machinery;
@@ -184,6 +191,17 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
     the full-population run (pinned in tests/test_scale.py).  Every run
     binds a :class:`WorkerPopulation`, so selection prices eq 3.4 over
     ``(W,)`` lane vectors in one fused pass either way.
+
+    ``max_events`` caps the event loop's total executed events (the run
+    raises rather than silently truncate the history when it is hit).
+    ``checkpoint_every=k`` saves a crash-consistent
+    :class:`~repro.checkpoint.FederationSnapshot` to ``checkpoint_dir``
+    every time the server version crosses a multiple of ``k``;
+    ``resume=True`` restores the newest readable snapshot from
+    ``checkpoint_dir`` into the freshly built federation and continues —
+    bit-identically to the uninterrupted run on loss-free links.
+    ``stop_after_checkpoints`` aborts right after that many saves (test
+    harness for the kill-at-checkpoint/resume split).
     """
     if topology is not None:
         from .topology import parse_topology, run_fl_topology
@@ -197,8 +215,75 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
             async_min_updates=async_min_updates, async_delta=async_delta,
             async_latest_table=async_latest_table, transport=transport,
             transport_down=transport_down, transport_frac=transport_frac,
-            server_mesh=server_mesh, cohort=cohort, cohort_seed=cohort_seed)
+            server_mesh=server_mesh, cohort=cohort, cohort_seed=cohort_seed,
+            max_events=max_events, checkpoint_every=checkpoint_every,
+            checkpoint_dir=checkpoint_dir, checkpoint_keep=checkpoint_keep,
+            resume=resume, stop_after_checkpoints=stop_after_checkpoints)
         return res.root_history
+    loop, server = build_experiment(
+        setup, mode=mode, selector=selector, aggregator=aggregator,
+        epochs_per_round=epochs_per_round, max_rounds=max_rounds,
+        target_accuracy=target_accuracy, selector_kw=selector_kw,
+        server_freq=server_freq, async_alpha=async_alpha,
+        async_stale_pow=async_stale_pow,
+        async_min_updates=async_min_updates, async_delta=async_delta,
+        async_latest_table=async_latest_table, transport=transport,
+        transport_down=transport_down, transport_frac=transport_frac,
+        server_mesh=server_mesh, cohort=cohort, cohort_seed=cohort_seed)
+    if resume or checkpoint_every is not None:
+        from repro.checkpoint import CheckpointManager, FederationSnapshot
+        from repro.checkpoint.snapshot import drive_checkpointed
+        if checkpoint_dir is None:
+            raise ValueError("checkpointing needs checkpoint_dir")
+        mgr = CheckpointManager(checkpoint_dir, keep=checkpoint_keep)
+        if resume:
+            got = mgr.restore_latest()
+            if got is None:
+                raise FileNotFoundError(
+                    f"resume=True but no readable checkpoint in "
+                    f"{checkpoint_dir}")
+            got[1].restore_run(loop, server)
+        else:
+            server.start()
+        if checkpoint_every is not None:
+            drive_checkpointed(
+                loop, mgr, lambda: server.version,
+                lambda: FederationSnapshot.capture_run(loop, server),
+                every=checkpoint_every, max_events=max_events,
+                stop_after=stop_after_checkpoints)
+        else:
+            loop.run(max_events=max_events)
+    else:
+        server.start()
+        loop.run(max_events=max_events)
+    if loop.exhausted:
+        raise RuntimeError(
+            f"event loop exhausted max_events={max_events} with work "
+            "still queued — the run did not complete and the history "
+            "would be silently truncated; shrink the run (fewer "
+            "rounds/workers) or raise max_events")
+    return server.history
+
+
+def build_experiment(setup: FLSetup, *, mode: str = "sync",
+                     selector: str = "all", aggregator: str = "fedavg",
+                     epochs_per_round: int = 10, max_rounds: int = 60,
+                     target_accuracy: Optional[float] = None,
+                     selector_kw: Optional[dict] = None,
+                     server_freq: float = 3.0, async_alpha: float = 1.0,
+                     async_stale_pow: float = 0.0,
+                     async_min_updates: int = 1, async_delta: bool = False,
+                     async_latest_table: bool = True,
+                     transport: str = "raw",
+                     transport_down: Optional[str] = None,
+                     transport_frac: float = 0.1,
+                     server_mesh: Optional[int] = None,
+                     cohort: Optional[int] = None, cohort_seed: int = 0):
+    """Build one single-server federation, wired but NOT started; returns
+    ``(loop, server)``.  ``run_fl`` is ``build_experiment`` + start +
+    drive; checkpoint restore needs the pre-start seam directly (a
+    snapshot is restored into a freshly built, never-started federation
+    constructed with the same arguments as the captured one)."""
     loop = EventLoop()
     est = TimeEstimator(server_freq=server_freq,
                         t_onebatch_server=setup.per_batch_server)
@@ -249,15 +334,7 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
                      per_batch_time=setup.per_batch_server * server_freq /
                      max(prof.cpu_freq * prof.cpu_prop, 1e-9))
         server.add_worker(w)
-    server.start()
-    loop.run(max_events=200_000)
-    if loop.exhausted:
-        raise RuntimeError(
-            "event loop exhausted max_events=200000 with work still "
-            "queued — the run did not complete and the history would be "
-            "silently truncated; shrink the run (fewer rounds/workers) "
-            "or raise max_events")
-    return server.history
+    return loop, server
 
 
 def run_sequential_baseline(setup: FLSetup, *, epochs_per_round: int = 10,

@@ -155,7 +155,8 @@ class _Leaf:
 
     __slots__ = ("lid", "server", "link", "bandwidth", "dead", "started",
                  "agg_since_push", "n_data_since_push", "push_inflight",
-                 "fan_inflight", "base_root_version", "merged_base")
+                 "fan_inflight", "push_rec", "fan_rec", "done_settling",
+                 "base_root_version", "merged_base")
 
     def __init__(self, lid: str, server: AggregationServer, link,
                  bandwidth: float):
@@ -169,6 +170,9 @@ class _Leaf:
         self.n_data_since_push = 0    # worker updates folded in since then
         self.push_inflight = None     # leaf->root Payload in flight
         self.fan_inflight = None      # root->leaf Payload in flight
+        self.push_rec = None          # checkpoint record of the push leg
+        self.fan_rec = None           # checkpoint record of the fan leg
+        self.done_settling = None     # pending _leaf_done_settled event
         self.base_root_version = 0    # root version the leaf last installed
         # the exact leaf-model snapshot of this leaf's most recently
         # MERGED push — i.e. the leaf state the current global already
@@ -327,9 +331,10 @@ class Topology:
             return
         # settle after the current call stack: the final aggregate's
         # on_leaf_aggregate (which may start the final push) runs first
-        self.loop.call_soon(self._leaf_done_settled, lf)
+        lf.done_settling = self.loop.call_soon(self._leaf_done_settled, lf)
 
     def _leaf_done_settled(self, lf: _Leaf):
+        lf.done_settling = None
         if self.done or lf.dead:
             return
         if (lf.agg_since_push > 0 and lf.push_inflight is None
@@ -350,9 +355,23 @@ class Topology:
         lf.agg_since_push = 0
         lf.n_data_since_push = 0
         lf.push_inflight = payload
-        transport_mod.transmit(
+        rec = {"payload": payload, "base_rv": base_rv, "n_data": n_data,
+               "snap": snap, "ev": None}
+        lf.push_rec = rec
+        rec["ev"] = transport_mod.transmit(
             self.loop, lf.link, payload,
             payload.wire_bytes / max(lf.bandwidth, 1.0),
+            lambda: self._push_arrive(lf, payload, base_rv, n_data, snap),
+            direction="up")
+
+    def resume_push(self, lf: _Leaf, rec: dict, t_abs: float):
+        """Re-create a snapshotted in-flight push leg (one schedule)."""
+        payload = rec["payload"]
+        lf.push_inflight = payload
+        lf.push_rec = rec
+        base_rv, n_data, snap = rec["base_rv"], rec["n_data"], rec["snap"]
+        rec["ev"] = transport_mod.resume_transmit(
+            self.loop, lf.link, payload, t_abs,
             lambda: self._push_arrive(lf, payload, base_rv, n_data, snap),
             direction="up")
 
@@ -361,6 +380,7 @@ class Topology:
         if lf.push_inflight is not payload:
             return        # cancelled (leaf died mid-push); EF already reverted
         lf.push_inflight = None
+        lf.push_rec = None
         if self.done:
             lf.link.restore_uplink(payload)
             return
@@ -461,16 +481,35 @@ class Topology:
         # global only contains the snapshot merged so far — rebasing the
         # install on the newer one would subtract progress it never held
         v_enc, base = self.version, lf.merged_base
-        transport_mod.transmit(
+        rec = {"payload": payload, "v_enc": v_enc, "base": base, "ev": None}
+        lf.fan_rec = rec
+        rec["ev"] = transport_mod.transmit(
             self.loop, lf.link, payload,
             payload.wire_bytes / max(lf.bandwidth, 1.0),
             lambda: self._fan_arrive(lf, payload, v_enc, base),
             direction="down")
 
+    def resume_fan(self, lf: _Leaf, rec: dict, t_abs: float):
+        """Re-create a snapshotted in-flight fan-out leg (one schedule)."""
+        payload = rec["payload"]
+        lf.fan_inflight = payload
+        lf.fan_rec = rec
+        v_enc, base = rec["v_enc"], rec["base"]
+        rec["ev"] = transport_mod.resume_transmit(
+            self.loop, lf.link, payload, t_abs,
+            lambda: self._fan_arrive(lf, payload, v_enc, base),
+            direction="down")
+
+    def resume_done_settled(self, lf: _Leaf, t_abs: float):
+        """Re-create a snapshotted pending leaf-done settle (one schedule)."""
+        lf.done_settling = self.loop.schedule_abs(
+            t_abs, self._leaf_done_settled, lf)
+
     def _fan_arrive(self, lf: _Leaf, payload, v_enc: int, base=None):
         if lf.fan_inflight is not payload:
             return        # cancelled (leaf died mid-fetch); ack untouched
         lf.fan_inflight = None
+        lf.fan_rec = None
         if lf.dead or lf.server.done:
             # never delivered / nothing left to resume: the ack must not
             # advance, the downlink EF revert chain unlinks this encode
@@ -523,9 +562,11 @@ class Topology:
         if lf.push_inflight is not None:
             lf.link.restore_uplink(lf.push_inflight)
             lf.push_inflight = None
+            lf.push_rec = None
         if lf.fan_inflight is not None:
             lf.link.restore_downlink(lf.fan_inflight)
             lf.fan_inflight = None
+            lf.fan_rec = None
         if self.cfg.push == "sync":
             self._maybe_sync_merge()
         self._check_done()
@@ -556,9 +597,11 @@ class Topology:
             if lf.push_inflight is not None:
                 lf.link.restore_uplink(lf.push_inflight)
                 lf.push_inflight = None
+                lf.push_rec = None
             if lf.fan_inflight is not None:
                 lf.link.restore_downlink(lf.fan_inflight)
                 lf.fan_inflight = None
+                lf.fan_rec = None
         self._pending.clear()
         if not self.cfg.root_failover:
             self._finish_all()
@@ -764,16 +807,56 @@ def build_topology(setup, *, topology, mode: str = "sync",
 
 def run_fl_topology(setup, *, topology,
                     on_build: Optional[Callable[[Topology], None]] = None,
-                    max_events: int = 200_000, **kw) -> TopologyResult:
+                    max_events: int = 200_000,
+                    checkpoint_every: Optional[int] = None,
+                    checkpoint_dir: Optional[str] = None,
+                    checkpoint_keep: int = 3,
+                    resume: bool = False,
+                    stop_after_checkpoints: Optional[int] = None,
+                    **kw) -> TopologyResult:
     """Build and run one hierarchical FL experiment end to end.  ``kw``
     mirrors :func:`repro.core.experiment.run_fl`'s per-server kwargs;
     ``on_build`` runs after construction and before the first dispatch
-    (tests install wire spies / fault schedules through it)."""
+    (tests install wire spies / fault schedules through it — on a
+    ``resume=True`` run it must NOT re-apply past fault schedules: the
+    snapshot already carries the injected reliability/audit state).
+    ``checkpoint_every``/``checkpoint_dir``/``resume`` snapshot and
+    restore the FULL topology state at global-version boundaries (leaf
+    version in passthrough, where there is no root counter)."""
     loop, topo = build_topology(setup, topology=topology, **kw)
     if on_build is not None:
         on_build(topo)
-    topo.start()
-    loop.run(max_events=max_events)
+    if resume or checkpoint_every is not None:
+        from repro.checkpoint import CheckpointManager, FederationSnapshot
+        from repro.checkpoint.snapshot import drive_checkpointed
+        if checkpoint_dir is None:
+            raise ValueError("checkpointing needs checkpoint_dir")
+        mgr = CheckpointManager(checkpoint_dir, keep=checkpoint_keep)
+        if resume:
+            got = mgr.restore_latest()
+            if got is None:
+                raise FileNotFoundError(
+                    f"resume=True but no readable checkpoint in "
+                    f"{checkpoint_dir}")
+            got[1].restore_topology(loop, topo)
+        else:
+            topo.start()
+        if topo.cfg.passthrough:
+            (only,) = topo.leaves.values()
+            version_fn = lambda: only.server.version
+        else:
+            version_fn = lambda: topo.version
+        if checkpoint_every is not None:
+            drive_checkpointed(
+                loop, mgr, version_fn,
+                lambda: FederationSnapshot.capture_topology(loop, topo),
+                every=checkpoint_every, max_events=max_events,
+                stop_after=stop_after_checkpoints)
+        else:
+            loop.run(max_events=max_events)
+    else:
+        topo.start()
+        loop.run(max_events=max_events)
     if loop.exhausted:
         raise RuntimeError(
             f"event loop exhausted max_events={max_events} with work "

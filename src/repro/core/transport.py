@@ -516,7 +516,7 @@ class _Channel:
 
 
 def transmit(loop, link: "Link", payload: Payload, t_tx: float,
-             deliver, direction: str = "up") -> None:
+             deliver, direction: str = "up"):
     """Send ``payload`` over ``link``, invoking ``deliver`` exactly once
     when the first copy arrives.
 
@@ -527,13 +527,17 @@ def transmit(loop, link: "Link", payload: Payload, t_tx: float,
     payload object with exponential backoff (``Transport.
     total_retransmits`` counts them); duplicate/late copies are dropped by
     the receiver's sequence dedup before they can touch decode state, EF
-    residuals, or byte counters."""
+    residuals, or byte counters.
+
+    Returns the scheduled delivery :class:`_Event` on the reliable
+    (single-event) paths so a snapshot can serialize the in-flight leg
+    exactly; lossy paths return ``None`` (their in-flight legs are
+    cancelled-with-credit at snapshot instead)."""
     rel = link.reliability
     if rel is None:
         aud = link.t.audit
         if aud is None:
-            loop.schedule(t_tx, deliver)
-            return
+            return loop.schedule(t_tx, deliver)
         # reliable link on an audited transport (e.g. the promoted root's
         # loopback after failover): same single event, but the delivery
         # ledger still books the transfer so the chaos auditor closes
@@ -542,8 +546,7 @@ def transmit(loop, link: "Link", payload: Payload, t_tx: float,
         def _deliver_booked():
             aud.note_delivered(direction, payload.wire_bytes)
             deliver()
-        loop.schedule(t_tx, _deliver_booked)
-        return
+        return loop.schedule(t_tx, _deliver_booked)
     t = link.t
     aud = t.audit
     ch = link.channel()
@@ -591,6 +594,25 @@ def transmit(loop, link: "Link", payload: Payload, t_tx: float,
         _send(attempt + 1)
 
     _send(0)
+    return None
+
+
+def resume_transmit(loop, link: "Link", payload: Payload, t_abs: float,
+                    deliver, direction: str = "up"):
+    """Re-create a reliable-path delivery event whose *send* was already
+    booked before a snapshot: the audit (if any) books only the delivery —
+    calling :func:`transmit` again would double-count the send.  Lossy
+    legs are never resumed this way (they are cancelled-with-credit at
+    snapshot and re-dispatched fresh).  ``t_abs`` is the serialized
+    absolute deadline, replayed exactly via ``schedule_abs`` so the
+    resumed run stays bit-identical to the uninterrupted one."""
+    aud = link.t.audit
+    if link.reliability is None and aud is not None:
+        def _deliver_booked():
+            aud.note_delivered(direction, payload.wire_bytes)
+            deliver()
+        return loop.schedule_abs(t_abs, _deliver_booked)
+    return loop.schedule_abs(t_abs, deliver)
 
 
 # sentinel: "no per-link override — inherit the transport's reliability"

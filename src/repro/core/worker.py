@@ -6,6 +6,13 @@ Numerics run for real (jitted JAX); durations are simulated from the same
 profile statistics the estimator sees — but with the *true* per-worker
 speed, so estimation error (eq 3.4 vs reality) is part of the simulation,
 exactly as in the thesis where estimates are refined by measurement.
+
+Every in-flight train conversation keeps a phase record in ``_conv``
+(fetch → train → send), holding exactly the inputs the pending event will
+consume when it fires.  A checkpoint reads those records to serialize the
+leg; :meth:`FLWorker.resume_conversation` re-creates the pending event
+from one, bit-identically.  The records are pure bookkeeping — no
+behavior of the live run reads them.
 """
 from __future__ import annotations
 
@@ -16,7 +23,7 @@ import jax
 
 from .estimator import WorkerProfile
 from .events import EventLoop
-from .transport import Link, Payload, transmit
+from .transport import Link, Payload, resume_transmit, transmit
 from .warehouse import DataWarehouse, Pointer
 
 
@@ -38,7 +45,7 @@ class FLWorker:
     # footprint (measured in benchmarks/scale_bench.py)
     __slots__ = ("worker_id", "address", "profile", "data", "train_fn",
                  "loop", "warehouse", "server_pointers", "_inflight",
-                 "_fetching", "busy", "_per_batch_time")
+                 "_fetching", "_conv", "busy", "_per_batch_time")
 
     def __init__(self, worker_id: str, *, profile: WorkerProfile,
                  data: Dict, train_fn: Callable, loop: EventLoop,
@@ -59,6 +66,8 @@ class FLWorker:
         # until the fetch-complete event — a round close mid-fetch cancels
         # it, and the link's ack/downlink-EF state must not advance
         self._fetching: Dict[Pointer, tuple] = {}
+        # per-server conversation phase record (checkpoint bookkeeping)
+        self._conv: Dict[Pointer, dict] = {}
         self.busy = False
         # ground-truth speed (may differ from the estimator's eq-3.4 guess)
         self._per_batch_time = per_batch_time if per_batch_time is not None \
@@ -89,11 +98,17 @@ class FLWorker:
         fetch = self._fetching.pop(server_pointer, None)
         if fetch is not None:
             down, link = fetch
+            rec = self._conv.get(server_pointer)
+            if rec is not None and rec.get("down") is down:
+                self._conv.pop(server_pointer)
             link.restore_downlink(down)
             self.busy = False
         entry = self._inflight.pop(server_pointer, None)
         if entry is not None:
             ticket, up, link = entry
+            rec = self._conv.get(server_pointer)
+            if rec is not None and rec.get("ticket") == ticket:
+                self._conv.pop(server_pointer)
             self.warehouse.revoke_ticket(ticket)
             link.restore_uplink(up)
 
@@ -134,11 +149,16 @@ class FLWorker:
             # the channel must deliver before the worker can decode, and
             # the staged event is what transmit() retransmits against.
             self._fetching[server_pointer] = (down, link)
-            transmit(self.loop, link, down, t_fetch,
-                     lambda: self._fetch_done(server_pointer, down,
-                                              base_version, epochs, link,
-                                              on_done),
-                     direction="down")
+            rec = {"phase": "fetch", "down": down,
+                   "base_version": base_version, "epochs": epochs,
+                   "ev": None}
+            self._conv[server_pointer] = rec
+            rec["ev"] = transmit(
+                self.loop, link, down, t_fetch,
+                lambda: self._fetch_done(server_pointer, down,
+                                         base_version, epochs, link,
+                                         on_done),
+                direction="down")
             return
         weights = link.decode_down(down)
         self._after_fetch(server_pointer, weights, base_version, epochs,
@@ -152,6 +172,9 @@ class FLWorker:
             # EF reverted). A newer dispatch may already own the slot.
             return
         self._fetching.pop(server_pointer)
+        rec = self._conv.get(server_pointer)
+        if rec is not None and rec.get("down") is down:
+            self._conv.pop(server_pointer)
         if self.profile.failed:          # died mid-fetch: never received
             link.restore_downlink(down)
             self.busy = False
@@ -168,6 +191,12 @@ class FLWorker:
         self._after_fetch(server_pointer, weights, base_version, epochs,
                           link, on_done, 0.0)
 
+    def _train(self, weights, epochs: int):
+        if len(self.data["x"]):
+            return self.train_fn(weights, self.data["x"],
+                                 self.data["y"], epochs)
+        return weights              # no local data: echo (setup-3 zeros)
+
     def _after_fetch(self, server_pointer: Pointer, weights,
                      base_version: int, epochs: int, link: Link, on_done,
                      t_fetch: float):
@@ -178,64 +207,149 @@ class FLWorker:
             # version — the monotone-version invariant's raw material
             link.t.audit.note_fetch(self.worker_id, base_version)
         t_train = self.true_t_one() * epochs
-
-        def _train():
-            if len(self.data["x"]):
-                return self.train_fn(weights, self.data["x"],
-                                     self.data["y"], epochs)
-            return weights          # no local data: echo (setup-3 zeros)
-
-        def _deliver(ticket, t_up, up_bytes):
-            self.busy = False
-            on_done(TrainResult(self.worker_id, ticket, base_version, epochs,
-                                self.profile.n_batches, t_train,
-                                t_up=t_up, up_bytes=up_bytes))
-
         up_bytes = link.upfront_up_bytes()
         if up_bytes is not None and link.reliability is None:
             # single-event fast path: only on a perfect wire — a lossy
             # uplink must go through the staged _inflight protocol so the
             # channel has a cancellable in-flight record to retransmit
-            def _finish():
-                # died mid-training, or the server dropped this worker
-                # (remove_server): a response would never be redeemed
-                if self.profile.failed or not self.accepts(server_pointer):
-                    self.busy = False
-                    return
-                up = link.encode_up(_train())
-                assert up.wire_bytes == up_bytes, (up.wire_bytes, up_bytes)
-                ticket = self.warehouse.issue_ticket(self.warehouse.put(up))
-                _deliver(ticket, self.true_t_transmit(up.wire_bytes),
-                         up.wire_bytes)
-            self.loop.schedule(t_fetch + t_train +
-                               self.true_t_transmit(up_bytes), _finish)
+            rec = {"phase": "train_fast", "weights": weights,
+                   "base_version": base_version, "epochs": epochs,
+                   "up_bytes": up_bytes, "t_train": t_train, "ev": None}
+            self._conv[server_pointer] = rec
+            self._schedule_finish(server_pointer, link, on_done, rec,
+                                  t_fetch + t_train +
+                                  self.true_t_transmit(up_bytes))
             return
+        rec = {"phase": "train", "weights": weights,
+               "base_version": base_version, "epochs": epochs,
+               "t_train": t_train, "ev": None}
+        self._conv[server_pointer] = rec
+        self._schedule_train_send(server_pointer, link, on_done, rec,
+                                  t_fetch + t_train)
+
+    def _schedule_finish(self, server_pointer: Pointer, link: Link,
+                         on_done, rec: dict, delay: float, *,
+                         at_abs: Optional[float] = None):
+        weights, epochs = rec["weights"], rec["epochs"]
+        base_version, t_train = rec["base_version"], rec["t_train"]
+        up_bytes = rec["up_bytes"]
+
+        def _finish():
+            if self._conv.get(server_pointer) is rec:
+                self._conv.pop(server_pointer)
+            # died mid-training, or the server dropped this worker
+            # (remove_server): a response would never be redeemed
+            if self.profile.failed or not self.accepts(server_pointer):
+                self.busy = False
+                return
+            up = link.encode_up(self._train(weights, epochs))
+            assert up.wire_bytes == up_bytes, (up.wire_bytes, up_bytes)
+            ticket = self.warehouse.issue_ticket(self.warehouse.put(up))
+            self.busy = False
+            on_done(TrainResult(self.worker_id, ticket, base_version,
+                                epochs, self.profile.n_batches, t_train,
+                                t_up=self.true_t_transmit(up.wire_bytes),
+                                up_bytes=up.wire_bytes))
+        rec["ev"] = (self.loop.schedule_abs(at_abs, _finish)
+                     if at_abs is not None
+                     else self.loop.schedule(delay, _finish))
+
+    def _schedule_train_send(self, server_pointer: Pointer, link: Link,
+                             on_done, rec: dict, delay: float, *,
+                             at_abs: Optional[float] = None):
+        weights, epochs = rec["weights"], rec["epochs"]
+        base_version, t_train = rec["base_version"], rec["t_train"]
 
         def _train_then_send():
+            if self._conv.get(server_pointer) is rec:
+                self._conv.pop(server_pointer)
             # died mid-training, or the server dropped this worker
             if self.profile.failed or not self.accepts(server_pointer):
                 self.busy = False
                 return
-            up = link.encode_up(_train())
+            up = link.encode_up(self._train(weights, epochs))
             ticket = self.warehouse.issue_ticket(self.warehouse.put(up))
             self._inflight[server_pointer] = (ticket, up, link)
             t_up = self.true_t_transmit(up.wire_bytes)
+            srec = {"phase": "send", "ticket": ticket, "up": up,
+                    "base_version": base_version, "epochs": epochs,
+                    "t_train": t_train, "t_up": t_up, "ev": None}
+            self._conv[server_pointer] = srec
+            self._schedule_send(server_pointer, link, on_done, srec, t_up)
+        rec["ev"] = (self.loop.schedule_abs(at_abs, _train_then_send)
+                     if at_abs is not None
+                     else self.loop.schedule(delay, _train_then_send))
 
-            def _send():
-                entry = self._inflight.get(server_pointer)
-                if entry is None or entry[0] != ticket:
-                    # this transfer was cancelled (round closed; ticket
-                    # revoked, EF mass restored). A newer dispatch may
-                    # already own the in-flight slot — leave it alone.
-                    if entry is None:
-                        self.busy = False
-                    return
-                self._inflight.pop(server_pointer)
-                if self.profile.failed:      # died mid-transmit
-                    self.warehouse.revoke_ticket(ticket)
-                    link.restore_uplink(up)
+    def _schedule_send(self, server_pointer: Pointer, link: Link, on_done,
+                       rec: dict, delay: float, *, resumed: bool = False,
+                       at_abs: Optional[float] = None):
+        ticket, up = rec["ticket"], rec["up"]
+        base_version, epochs = rec["base_version"], rec["epochs"]
+        t_train, t_up = rec["t_train"], rec["t_up"]
+
+        def _send():
+            entry = self._inflight.get(server_pointer)
+            if entry is None or entry[0] != ticket:
+                # this transfer was cancelled (round closed; ticket
+                # revoked, EF mass restored). A newer dispatch may
+                # already own the in-flight slot — leave it alone.
+                if entry is None:
                     self.busy = False
-                    return
-                _deliver(ticket, t_up, up.wire_bytes)
-            transmit(self.loop, link, up, t_up, _send, direction="up")
-        self.loop.schedule(t_fetch + t_train, _train_then_send)
+                return
+            self._inflight.pop(server_pointer)
+            if self._conv.get(server_pointer) is rec:
+                self._conv.pop(server_pointer)
+            if self.profile.failed:      # died mid-transmit
+                self.warehouse.revoke_ticket(ticket)
+                link.restore_uplink(up)
+                self.busy = False
+                return
+            self.busy = False
+            on_done(TrainResult(self.worker_id, ticket, base_version,
+                                epochs, self.profile.n_batches, t_train,
+                                t_up=t_up, up_bytes=up.wire_bytes))
+        if resumed:
+            # the send was already booked by the pre-snapshot transmit();
+            # re-create only the delivery event
+            rec["ev"] = self._sched_delivery(link, up, _send, at_abs, "up")
+        else:
+            rec["ev"] = transmit(self.loop, link, up, delay, _send,
+                                 direction="up")
+
+    # --- checkpoint/resume ---
+    def _sched_delivery(self, link: Link, payload: Payload, deliver,
+                        t_abs: float, direction: str):
+        return resume_transmit(self.loop, link, payload, t_abs, deliver,
+                               direction)
+
+    def resume_conversation(self, server_pointer: Pointer, link: Link,
+                            on_done, rec: dict, t_abs: float):
+        """Re-create one snapshotted in-flight leg.  Consumes exactly one
+        ``loop.schedule`` call, so the restore driver's sorted
+        (time, seq) replay preserves the original tie-break order; the
+        serialized absolute deadline is replayed exactly (schedule_abs)."""
+        phase = rec["phase"]
+        self.busy = True
+        self._conv[server_pointer] = rec
+        if phase == "fetch":
+            down = rec["down"]
+            self._fetching[server_pointer] = (down, link)
+            rec["ev"] = self._sched_delivery(
+                link, down,
+                lambda: self._fetch_done(server_pointer, down,
+                                         rec["base_version"],
+                                         rec["epochs"], link, on_done),
+                t_abs, "down")
+        elif phase == "train_fast":
+            self._schedule_finish(server_pointer, link, on_done, rec, 0.0,
+                                  at_abs=t_abs)
+        elif phase == "train":
+            self._schedule_train_send(server_pointer, link, on_done, rec,
+                                      0.0, at_abs=t_abs)
+        elif phase == "send":
+            self._inflight[server_pointer] = (rec["ticket"], rec["up"],
+                                              link)
+            self._schedule_send(server_pointer, link, on_done, rec, 0.0,
+                                resumed=True, at_abs=t_abs)
+        else:                            # pragma: no cover
+            raise ValueError(f"unknown conversation phase: {phase!r}")

@@ -67,3 +67,61 @@ def test_random_selector_size(k):
     sel = RandomSelector(k=k, seed=1)
     profs = _profiles([1.0] * 10)
     assert len(sel.select(profs)) == min(k, 10)
+
+
+# --- durable federation: snapshot save->restore round-trip property ---
+
+@given(st.sampled_from(["sync", "async", "async_delta"]),
+       st.integers(0, 4))
+@settings(deadline=None, max_examples=6)
+def test_federation_snapshot_roundtrip_exact(mode, seed):
+    """capture -> pickle -> restore into a fresh identically-built
+    federation -> capture again: byte counters, server version, link
+    tx-base presence and EF-residual norms all survive EXACTLY (no
+    tolerance — a snapshot is a bit-faithful image, not an estimate)."""
+    import pickle
+    import tempfile
+
+    import numpy as np
+
+    from repro.checkpoint import CheckpointManager, FederationSnapshot
+    from repro.core import TABLE_4_1, make_setup, run_fl
+    from repro.core.experiment import build_experiment
+
+    kw = dict(selector="all", epochs_per_round=2, max_rounds=3,
+              transport="topk_ef+int8", transport_frac=0.1)
+    if mode == "async":
+        kw.update(mode="async", async_alpha=0.9, async_latest_table=False,
+                  aggregator="linear")
+    elif mode == "async_delta":
+        kw.update(mode="async", async_delta=True)
+    else:
+        kw.update(mode="sync")
+    setup_kw = dict(seed=seed, noise=0.25, batch_size=32, het="strong")
+
+    with tempfile.TemporaryDirectory() as d:
+        run_fl(make_setup(TABLE_4_1["mnist_even"], **setup_kw),
+               checkpoint_every=1, checkpoint_dir=d,
+               stop_after_checkpoints=1, **kw)
+        _, snap, _ = CheckpointManager(d).restore_latest()
+    snap2 = pickle.loads(pickle.dumps(snap))
+    loop, server = build_experiment(
+        make_setup(TABLE_4_1["mnist_even"], **setup_kw), **kw)
+    snap2.restore_run(loop, server)
+    snap3 = FederationSnapshot.capture_run(loop, server)
+
+    s, s3 = snap.state["server"], snap3.state["server"]
+    assert s3["version"] == s["version"]
+    assert s3["total_up"] == s["total_up"]
+    assert s3["total_down"] == s["total_down"]
+
+    def norms(img):
+        return sorted(
+            (wid, None if li["residual"] is None
+             else float(np.linalg.norm(li["residual"])).hex())
+            for wid, li in img["links"].items())
+
+    assert norms(s3["transport"]) == norms(s["transport"])
+    assert snap3.clock == snap.clock
+    assert sorted((r["kind"], r["t"]) for r in snap3.events) \
+        == sorted((r["kind"], r["t"]) for r in snap.events)

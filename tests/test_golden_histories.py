@@ -85,3 +85,50 @@ def test_auto_transport_never_dirties_existing_fixtures():
     # alias of a fixture (it must diverge in bytes once compression kicks
     # in) — if this ever matches a fixture key, the tuner never engaged
     assert history_record(h_auto) != golden["raw/sync"]
+
+
+# --- durable federation (checkpoint/resume) golden splits ---
+# A run killed at a checkpoint boundary and resumed from disk must
+# produce, concatenated, the SAME float-hex history as the uninterrupted
+# run — i.e. the same pinned fixtures, with no regeneration.  The split
+# cases cover every mode (the selector/budget state each mode carries)
+# for both pinned transports, plus the topology spelling (a snapshot of
+# the full hierarchical state through the passthrough path).
+SPLIT_CASES = [(t, m) for t in ("raw", "uplink_only", "raw_flat1x1")
+               for m in MODES]
+
+
+@pytest.mark.parametrize("tname,mname", SPLIT_CASES,
+                         ids=[f"{t}-{m}" for t, m in SPLIT_CASES])
+def test_checkpoint_split_bit_identical_to_fixture(tname, mname, tmp_path):
+    fixture = _FIXTURE_OF.get(tname, tname)
+    golden = json.loads(GOLDEN.read_text())[f"{fixture}/{mname}"]
+    d = str(tmp_path / "ckpt")
+    # phase 1: run with checkpointing, killed right after the first save
+    setup = make_setup(TABLE_4_1["mnist_even"], **SETUP_KW)
+    h_part = run_fl(setup, epochs_per_round=EP, max_rounds=ROUNDS,
+                    **MODES[mname], **TRANSPORTS[tname],
+                    checkpoint_every=2, checkpoint_dir=d,
+                    stop_after_checkpoints=1)
+    assert len(history_record(h_part)) < len(golden), \
+        "the kill did not actually truncate the run"
+    # phase 2: fresh process state, resume from disk, run to completion
+    setup = make_setup(TABLE_4_1["mnist_even"], **SETUP_KW)
+    h = run_fl(setup, epochs_per_round=EP, max_rounds=ROUNDS,
+               **MODES[mname], **TRANSPORTS[tname],
+               checkpoint_dir=d, resume=True)
+    assert history_record(h) == golden, \
+        f"killed+resumed history diverged from the {fixture} fixture"
+
+
+@pytest.mark.parametrize("mname", list(MODES))
+def test_checkpointing_itself_is_invisible(mname, tmp_path):
+    """Running WITH checkpoint saves enabled (no kill) must still match
+    the fixture bit-for-bit: capture must never mutate the live run."""
+    golden = json.loads(GOLDEN.read_text())[f"raw/{mname}"]
+    setup = make_setup(TABLE_4_1["mnist_even"], **SETUP_KW)
+    h = run_fl(setup, epochs_per_round=EP, max_rounds=ROUNDS,
+               **MODES[mname], **TRANSPORTS["raw"],
+               checkpoint_every=1, checkpoint_dir=str(tmp_path / "c"))
+    assert history_record(h) == golden, \
+        "enabling checkpointing perturbed the run it was observing"
