@@ -617,6 +617,129 @@ def fig_resume_sweep(smoke: bool = False):
             for m, d in derived.items()}
 
 
+# --- heterogeneity scenario sweep (server optimizers, ISSUE 10) -----------
+
+# server-side algorithms: plain FedAvg plus the server_opt variants and
+# worker-side FedProx (a setup-level knob: the proximal term anchors on
+# the params the worker actually received, so it composes with lossy
+# downlinks for free)
+HETERO_ALGS = {
+    "fedavg": {},
+    "fedavgm": dict(server_opt="fedavgm", server_opt_kw={"momentum": 0.9}),
+    "fedadam": dict(server_opt="fedadam", server_opt_kw={"lr": 0.05}),
+    "feddyn": dict(server_opt="feddyn", server_opt_kw={"gamma": 0.25}),
+    "fedprox": dict(fedprox_mu=0.01),          # make_setup kwarg, not run_fl
+}
+# Dirichlet label-skew severities: pathological, the thesis-relevant
+# contended setting, and near-IID as the control column
+HETERO_ALPHAS = (0.1, 0.3, 1.0)
+HETERO_MODES = {
+    "sync": dict(mode="sync", selector="all"),
+    "async": dict(mode="async", selector="all", **ASYNC_KW),
+}
+
+
+def fig_heterogeneity_sweep(smoke: bool = False):
+    """Non-IID heterogeneity sweep: algorithm x Dirichlet alpha x
+    sync/async (raw transport), plus a compressed-transport arm at the
+    contended alpha=0.3 column (sync, symmetric topk_ef+int8) showing the
+    server optimizers still pay off when the pseudo-gradient is built
+    from lossy uplinks.
+
+    Emits ``benchmarks/results/BENCH_hetero.json``.  The derived summary
+    carries the acceptance cells: at every alpha <= 0.3 column, whether
+    FedAvgM or FedAdam reaches t80 faster than plain FedAvg (a FedAvg
+    that never reaches 80% counts as beaten by any optimizer that does).
+    ``smoke=True`` runs a tiny alpha=0.3 sync/async grid (CI) that writes
+    the same artifact shape.
+    """
+    alphas = (0.3,) if smoke else HETERO_ALPHAS
+    algs = (("fedavg", "fedavgm", "fedadam") if smoke
+            else tuple(HETERO_ALGS))
+    modes = HETERO_MODES
+    # an async "round" is ONE worker update (staleness-weighted merge),
+    # a sync round is a full-cohort pass — 10x the rounds makes the two
+    # columns comparable in effective passes over the worker set
+    rounds = ({"sync": 14, "async": 140} if smoke
+              else {"sync": 40, "async": 400})
+    curves, derived = {}, {}
+
+    def _cell(alpha, alg, mkw, tkw):
+        akw = dict(HETERO_ALGS[alg])
+        setup_kw = dict(REGIME)
+        if "fedprox_mu" in akw:
+            setup_kw["fedprox_mu"] = akw.pop("fedprox_mu")
+        setup = make_setup(TABLE_4_1["mnist_even"], seed=0, **setup_kw)
+        h = run_fl(setup, epochs_per_round=EP,
+                   max_rounds=rounds["async" if mkw.get("mode") == "async"
+                                     else "sync"],
+                   partition="dirichlet",
+                   partition_kw={"alpha": alpha, "seed": 0},
+                   **mkw, **akw, **tkw)
+        return h
+
+    for alpha in alphas:
+        for mname, mkw in modes.items():
+            for alg in algs:
+                h = _cell(alpha, alg, mkw, dict(transport="raw"))
+                name = f"a{alpha}/{mname}/{alg}"
+                curves[name] = [(p.time, p.accuracy) for p in h]
+                derived[name] = {"t80": time_to_accuracy(h, 0.8),
+                                 "final_accuracy": h[-1].accuracy}
+    # compressed-transport arm: the contended column under symmetric
+    # lossy links (FedProx's anchor is the decoded downlink here)
+    comp_alpha = alphas[0] if smoke else 0.3
+    if not smoke:
+        for alg in algs:
+            h = _cell(comp_alpha, alg, modes["sync"],
+                      dict(transport="topk_ef+int8", transport_frac=0.1))
+            name = f"a{comp_alpha}/sync_topk/{alg}"
+            curves[name] = [(p.time, p.accuracy) for p in h]
+            derived[name] = {"t80": time_to_accuracy(h, 0.8),
+                             "final_accuracy": h[-1].accuracy}
+
+    # acceptance summary: per low-alpha column, does a server optimizer
+    # (FedAvgM or FedAdam) beat plain FedAvg to 80%?
+    def _beats(base_t80, opt_t80):
+        if opt_t80 is None:
+            return False
+        return base_t80 is None or opt_t80 < base_t80
+
+    summary = {}
+    cols = [(a, m) for a in alphas if a <= 0.3 for m in modes]
+    if not smoke:
+        cols.append((comp_alpha, "sync_topk"))
+    for alpha, mname in cols:
+        base = derived[f"a{alpha}/{mname}/fedavg"]["t80"]
+        opts = {alg: derived[f"a{alpha}/{mname}/{alg}"]["t80"]
+                for alg in ("fedavgm", "fedadam")
+                if f"a{alpha}/{mname}/{alg}" in derived}
+        wins = {alg: _beats(base, t) for alg, t in opts.items()}
+        reached = [t for t in opts.values() if t is not None]
+        summary[f"a{alpha}/{mname}"] = {
+            "fedavg_t80": base,
+            "opt_t80": opts,
+            # when nobody reaches 80% in budget (async at extreme skew),
+            # final accuracy still ranks the algorithms
+            "fedavg_final":
+                derived[f"a{alpha}/{mname}/fedavg"]["final_accuracy"],
+            "opt_final": {alg: derived[f"a{alpha}/{mname}/{alg}"]
+                          ["final_accuracy"] for alg in opts},
+            "server_opt_beats_fedavg": any(wins.values()),
+            "speedup_vs_fedavg":
+                None if not (reached and base) else base / min(reached),
+        }
+    derived["summary"] = summary
+    rec = {"config": {"smoke": smoke, "alphas": list(alphas),
+                      "algs": list(algs), "modes": list(modes),
+                      "max_rounds": rounds, "epochs_per_round": EP,
+                      "regime": REGIME},
+           "curves": curves, "derived": derived}
+    BENCH_RESULTS.mkdir(parents=True, exist_ok=True)
+    (BENCH_RESULTS / "BENCH_hetero.json").write_text(json.dumps(rec, indent=2))
+    return summary
+
+
 ALL = {
     "fig4_1_sequential_vs_fl": fig4_1_sequential_vs_fl,
     "fig4_2_even_vs_uneven": fig4_2_even_vs_uneven,
@@ -632,6 +755,7 @@ ALL = {
     "fig_chaos_sweep": fig_chaos_sweep,
     "fig_autotune_sweep": fig_autotune_sweep,
     "fig_resume_sweep": fig_resume_sweep,
+    "fig_heterogeneity_sweep": fig_heterogeneity_sweep,
 }
 
 

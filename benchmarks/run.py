@@ -39,6 +39,10 @@ def main() -> None:
         print(json.dumps(fl_figures.fig_resume_sweep(smoke=True),
                          indent=2))
         return
+    if "--smoke-hetero" in sys.argv:
+        print(json.dumps(fl_figures.fig_heterogeneity_sweep(smoke=True),
+                         indent=2))
+        return
 
     # the full sweep tolerates any one bench dying (e.g. an optional dep
     # missing from a minimal environment): the rest still report

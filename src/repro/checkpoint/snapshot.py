@@ -381,6 +381,11 @@ def _capture_server(caps: _Capture, srv) -> dict:
                 "tx": dict(srv.est._measured_tx)},
         "population": _capture_population(srv.population),
         "flat": _capture_flat(srv._flat),
+        # optimizer vectors only: the packed prev anchor is re-derived on
+        # restore (bitwise-same repack of the restored weights — the
+        # identity check in step_vec misses against the restored tree)
+        "server_opt": (srv.server_opt.capture()
+                       if srv.server_opt is not None else None),
         "transport": _capture_transport(caps, srv.transport),
         "warehouse": _capture_warehouse(caps, srv.warehouse),
         "workers": workers_img,
@@ -415,6 +420,9 @@ def _restore_server(srv, img: dict, ack_states: dict) -> None:
     _restore_population(srv.population, img["population"])
     srv._profiles_view = None
     _restore_flat(srv._flat, img["flat"])
+    opt_img = img.get("server_opt")     # .get: pre-optimizer snapshots
+    if opt_img is not None and srv.server_opt is not None:
+        srv.server_opt.restore(opt_img)
     _restore_transport(srv.transport, img["transport"], ack_states, srv.est)
     _restore_warehouse(srv.warehouse, img["warehouse"])
     srv._timeout_ev = None
@@ -606,6 +614,10 @@ class FederationSnapshot:
             "history": list(topo.history),
             "pending": dict(topo._pending),
             "failover_dispatches": list(topo.failover_dispatches),
+            # root-carried optimizer vectors (prev anchor re-derived, as
+            # in _capture_server)
+            "server_opt": (topo.server_opt.capture()
+                           if topo.server_opt is not None else None),
             "leaves": {lid: {
                 "dead": lf.dead, "started": lf.started,
                 "agg_since_push": lf.agg_since_push,
@@ -671,6 +683,9 @@ class FederationSnapshot:
         topo.history = list(state["history"])
         topo._pending = dict(state["pending"])
         topo.failover_dispatches = list(state["failover_dispatches"])
+        opt_img = state.get("server_opt")   # .get: pre-optimizer snapshots
+        if opt_img is not None and topo.server_opt is not None:
+            topo.server_opt.restore(opt_img)
         for lid, li in state["leaves"].items():
             lf = topo.leaves[lid]
             lf.dead = li["dead"]

@@ -7,7 +7,7 @@ byte accounting), hierarchical multi-server topologies (leaf servers over
 disjoint worker pools re-aggregated at a root), and beyond-paper update
 compression."""
 from . import (aggregation, compression, estimator, events, federated,
-               flatbuf, population, selection, server, topology, transport,
-               warehouse, worker)
-from .experiment import (TABLE_4_1, TABLE_4_2, make_setup, run_fl,
-                         run_sequential_baseline, time_to_accuracy)
+               flatbuf, population, selection, server, server_opt, topology,
+               transport, warehouse, worker)
+from .experiment import (TABLE_4_1, TABLE_4_2, make_setup, repartition_setup,
+                         run_fl, run_sequential_baseline, time_to_accuracy)

@@ -5,6 +5,7 @@ histories.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
@@ -13,7 +14,8 @@ import jax
 import numpy as np
 
 from repro.configs.paper_cnn import CNNConfig, FAST_MNIST_CNN, MNIST_CNN
-from repro.data.synth import federated_split, make_classification_dataset
+from repro.data.synth import (federated_split, make_classification_dataset,
+                              partition_split)
 from repro.models import cnn
 from repro.parallel import sharding as psharding
 
@@ -89,15 +91,28 @@ def make_setup(batches_per_worker: Sequence[int], *,
                cfg: CNNConfig = FAST_MNIST_CNN, model: str = "mlp",
                het: str = "mixed", batch_size: int = 32, n_test: int = 512,
                seed: int = 0, per_batch_server: float = 0.05,
-               noise: float = 0.35, mlp_lr: float = 0.1) -> FLSetup:
+               noise: float = 0.35, mlp_lr: float = 0.1,
+               partition: str = "iid",
+               partition_kw: Optional[dict] = None,
+               fedprox_mu: float = 0.0) -> FLSetup:
+    """``partition`` picks the federated data split (``data.synth``):
+    ``"iid"`` is the original global shuffle (byte-identical — golden
+    runs never leave it), ``"dirichlet"`` Dirichlet label skew
+    (``partition_kw={"alpha": ...}``), ``"quantity"`` per-worker quantity
+    skew.  ``fedprox_mu > 0`` swaps the MLP local trainer for FedProx
+    (proximal term anchored at the weights the worker actually decodes
+    off the downlink); ``0.0`` is the plain SGD trainer, bit-exact."""
     total_batches = sum(batches_per_worker)
     x, y = make_classification_dataset(
         total_batches * batch_size + n_test, hw=cfg.image_hw,
         channels=cfg.channels, noise=noise, seed=seed)
     test_x, test_y = x[-n_test:], y[-n_test:]
-    shards = federated_split(x[:-n_test], y[:-n_test], batches_per_worker,
-                             batch_size=batch_size, seed=seed)
+    shards = partition_split(x[:-n_test], y[:-n_test], batches_per_worker,
+                             partition=partition, batch_size=batch_size,
+                             seed=seed, **(partition_kw or {}))
     if model == "cnn":
+        if fedprox_mu:
+            raise ValueError("fedprox_mu is only wired for model='mlp'")
         weights0 = cnn.init_cnn(jax.random.PRNGKey(seed), cfg)
         train_fn = functools.partial(cnn_train_wrapper, lr=cfg.lr)
         acc_fn = cnn.cnn_accuracy
@@ -105,7 +120,10 @@ def make_setup(batches_per_worker: Sequence[int], *,
         from repro.models import mlp as mlp_mod
         in_dim = cfg.image_hw * cfg.image_hw * cfg.channels
         weights0 = mlp_mod.init_mlp(jax.random.PRNGKey(seed), in_dim=in_dim)
-        train_fn = functools.partial(mlp_train_wrapper, lr=mlp_lr)
+        train_fn = (functools.partial(mlp_prox_train_wrapper, lr=mlp_lr,
+                                      mu=fedprox_mu)
+                    if fedprox_mu else
+                    functools.partial(mlp_train_wrapper, lr=mlp_lr))
         acc_fn = mlp_mod.mlp_accuracy
     tx, ty = jax.numpy.asarray(test_x), jax.numpy.asarray(test_y)
     eval_fn = lambda w: float(acc_fn(w, tx, ty))
@@ -133,6 +151,18 @@ def mlp_train_wrapper(params, x, y, epochs, lr=0.1):
                                  lr=lr, epochs=int(epochs))
 
 
+def mlp_prox_train_wrapper(params, x, y, epochs, lr=0.1, mu=0.0):
+    # FedProx local step: the ``params`` this wrapper receives are the
+    # worker's decode of the downlink (the lossy tx_base reconstruction
+    # when the transport compresses), so the proximal anchor is the
+    # global the worker actually holds — composing with lossy downlinks
+    # needs no transport-side plumbing at all
+    import jax.numpy as jnp
+    from repro.models import mlp as mlp_mod
+    return mlp_mod.mlp_prox_train(params, jnp.asarray(x), jnp.asarray(y),
+                                  lr=lr, epochs=int(epochs), mu=mu)
+
+
 def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
            aggregator: str = "fedavg", epochs_per_round: int = 10,
            max_rounds: int = 60, target_accuracy: Optional[float] = None,
@@ -144,6 +174,9 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
            transport_frac: float = 0.1,
            server_mesh: Optional[int] = None,
            cohort: Optional[int] = None, cohort_seed: int = 0,
+           server_opt=None, server_opt_kw: Optional[dict] = None,
+           partition: Optional[str] = None,
+           partition_kw: Optional[dict] = None,
            topology=None,
            topology_kw: Optional[dict] = None,
            max_events: int = 200_000,
@@ -192,6 +225,28 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
     binds a :class:`WorkerPopulation`, so selection prices eq 3.4 over
     ``(W,)`` lane vectors in one fused pass either way.
 
+    ``server_opt`` names a server-side optimizer (``core.server_opt``:
+    ``"fedavgm"`` server momentum, ``"fedadam"`` per-coordinate adaptive
+    step, ``"feddyn"`` drift correction; ``server_opt_kw`` its
+    constructor kwargs, e.g. ``{"momentum": 0.9}``), applied to the
+    global install as one fused pass over the packed merge result —
+    ``d = merged - server`` is the pseudo-gradient.  ``None`` (default)
+    keeps plain FedAvg on the byte-identical golden-pinned path; under a
+    ``topology`` the ROOT carries the optimizer while leaf merges stay
+    FedAvg (in passthrough ``1x1`` the lone leaf carries it, preserving
+    the passthrough bit-identity).  Degenerate settings (FedAvgM
+    ``momentum=0, lr=1``; FedAdam ``beta1=beta2=0, tau=inf``; FedDyn
+    ``gamma=0``) short-circuit to plain ``mix_into`` bit-exactly.
+
+    ``partition`` re-partitions the setup's pooled samples across workers
+    without rebuilding the setup: ``"dirichlet"`` Dirichlet label skew
+    (``partition_kw={"alpha": 0.3, "seed": ...}``), ``"quantity"``
+    per-worker quantity skew, ``"iid"`` the original global shuffle.
+    ``None`` leaves ``setup.shards`` untouched (the golden path).
+    Worker-side FedProx is a setup-level knob instead —
+    ``make_setup(fedprox_mu=)`` — because the proximal anchor lives in
+    the local training step, not in the aggregation.
+
     ``max_events`` caps the event loop's total executed events (the run
     raises rather than silently truncate the history when it is hit).
     ``checkpoint_every=k`` saves a crash-consistent
@@ -203,6 +258,9 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
     ``stop_after_checkpoints`` aborts right after that many saves (test
     harness for the kill-at-checkpoint/resume split).
     """
+    if partition is not None:
+        setup = repartition_setup(setup, partition=partition,
+                                  **(partition_kw or {}))
     if topology is not None:
         from .topology import parse_topology, run_fl_topology
         res = run_fl_topology(
@@ -216,6 +274,7 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
             async_latest_table=async_latest_table, transport=transport,
             transport_down=transport_down, transport_frac=transport_frac,
             server_mesh=server_mesh, cohort=cohort, cohort_seed=cohort_seed,
+            server_opt=server_opt, server_opt_kw=server_opt_kw,
             max_events=max_events, checkpoint_every=checkpoint_every,
             checkpoint_dir=checkpoint_dir, checkpoint_keep=checkpoint_keep,
             resume=resume, stop_after_checkpoints=stop_after_checkpoints)
@@ -229,7 +288,8 @@ def run_fl(setup: FLSetup, *, mode: str = "sync", selector: str = "all",
         async_min_updates=async_min_updates, async_delta=async_delta,
         async_latest_table=async_latest_table, transport=transport,
         transport_down=transport_down, transport_frac=transport_frac,
-        server_mesh=server_mesh, cohort=cohort, cohort_seed=cohort_seed)
+        server_mesh=server_mesh, cohort=cohort, cohort_seed=cohort_seed,
+        server_opt=server_opt, server_opt_kw=server_opt_kw)
     if resume or checkpoint_every is not None:
         from repro.checkpoint import CheckpointManager, FederationSnapshot
         from repro.checkpoint.snapshot import drive_checkpointed
@@ -278,7 +338,8 @@ def build_experiment(setup: FLSetup, *, mode: str = "sync",
                      transport_down: Optional[str] = None,
                      transport_frac: float = 0.1,
                      server_mesh: Optional[int] = None,
-                     cohort: Optional[int] = None, cohort_seed: int = 0):
+                     cohort: Optional[int] = None, cohort_seed: int = 0,
+                     server_opt=None, server_opt_kw: Optional[dict] = None):
     """Build one single-server federation, wired but NOT started; returns
     ``(loop, server)``.  ``run_fl`` is ``build_experiment`` + start +
     drive; checkpoint restore needs the pre-start seam directly (a
@@ -327,7 +388,8 @@ def build_experiment(setup: FLSetup, *, mode: str = "sync",
         async_alpha=async_alpha, async_stale_pow=async_stale_pow,
         async_min_updates=async_min_updates, async_delta=async_delta,
         async_latest_table=async_latest_table, transport=tr, mesh=mesh,
-        population=pop, cohort=cohort, cohort_seed=cohort_seed)
+        population=pop, cohort=cohort, cohort_seed=cohort_seed,
+        server_opt=server_opt, server_opt_kw=server_opt_kw)
     for prof, shard in zip(setup.profiles, setup.shards):
         w = FLWorker(prof.worker_id, profile=prof, data=shard,
                      train_fn=setup.train_fn, loop=loop,
@@ -335,6 +397,30 @@ def build_experiment(setup: FLSetup, *, mode: str = "sync",
                      max(prof.cpu_freq * prof.cpu_prop, 1e-9))
         server.add_worker(w)
     return loop, server
+
+
+def repartition_setup(setup: FLSetup, *, partition: str,
+                      seed: int = 0, **kw) -> FLSetup:
+    """Re-split an existing setup's pooled training samples across the
+    same workers with a named partitioner (``data.synth.PARTITIONERS``)
+    — pool every shard back together, re-partition, and return a copy of
+    the setup with only ``shards`` replaced (weights, profiles, test set
+    and train_fn untouched, so two runs differing only in ``partition=``
+    isolate the statistical-heterogeneity effect exactly)."""
+    xs = [s["x"] for s in setup.shards]
+    ys = [s["y"] for s in setup.shards]
+    nonempty = [a for a in xs if len(a)]
+    if not nonempty:
+        return setup
+    all_x = np.concatenate(nonempty)
+    all_y = np.concatenate([a for a in ys if len(a)])
+    batches = [p.n_batches if len(s["x"]) else 0
+               for p, s in zip(setup.profiles, setup.shards)]
+    total = sum(batches)
+    batch_size = len(all_x) // max(total, 1)
+    shards = partition_split(all_x, all_y, batches, partition=partition,
+                             batch_size=batch_size, seed=seed, **kw)
+    return dataclasses.replace(setup, shards=shards)
 
 
 def run_sequential_baseline(setup: FLSetup, *, epochs_per_round: int = 10,

@@ -353,6 +353,9 @@ class FlatServerState:
         self.bundle = bundle_for(template, mesh)
         self.use_pallas = use_pallas
         self.mesh = mesh
+        # optional core.server_opt.ServerOpt: transforms the packed merge
+        # result in _finish (one fused elementwise pass) before unpack
+        self.server_opt = None
         self._rows: Optional[jnp.ndarray] = None
         self._server_flat: Optional[jnp.ndarray] = None
         self._server_tree: Optional[object] = None   # strong ref: mirror key
@@ -449,8 +452,19 @@ class FlatServerState:
             server_flat = self._server_buffer(server_tree)
             merged = fused_merge(server_flat, self._rows, wvec,
                                  self.use_pallas, mesh=self.mesh)
+        return self._finish(server_tree, merged)
+
+    def _finish(self, server_tree, merged):
+        """Shared merge epilogue: optional server-optimizer pass (in
+        packed space — the whole point of the flat substrate), unpack,
+        refresh the packed mirror.  With ``server_opt=None`` this is
+        byte-for-byte the old tail (golden-pinned)."""
+        if self.server_opt is not None:
+            merged = self.server_opt.step_vec(self, server_tree, merged)
         out = self.bundle.unpack(merged)
         self._server_flat, self._server_tree = merged, out
+        if self.server_opt is not None:
+            self.server_opt.note_result(merged, out)
         return out
 
     # --- cohort row window --------------------------------------------
@@ -518,9 +532,7 @@ class FlatServerState:
             server_flat = self._server_buffer(server_tree)
             merged = fused_merge(server_flat, self._rows, wvec,
                                  self.use_pallas, mesh=self.mesh)
-        out = self.bundle.unpack(merged)
-        self._server_flat, self._server_tree = merged, out
-        return out
+        return self._finish(server_tree, merged)
 
     def row_vec(self, row: int) -> jnp.ndarray:
         """Read one claimed row back as a packed flat vector (the

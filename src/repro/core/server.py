@@ -21,6 +21,7 @@ import numpy as np
 
 from . import aggregation as agg
 from . import flatbuf
+from . import server_opt as server_opt_mod
 from . import transport as transport_mod
 from .estimator import TimeEstimator, WorkerProfile
 from .events import EventLoop
@@ -57,7 +58,8 @@ class AggregationServer:
                  mesh=None, name: str = "aggregator",
                  population: Optional[WorkerPopulation] = None,
                  cohort: Optional[int] = None, cohort_seed: int = 0,
-                 max_resident_links: Optional[int] = None):
+                 max_resident_links: Optional[int] = None,
+                 server_opt=None, server_opt_kw: Optional[dict] = None):
         assert mode in ("sync", "async")
         self.name = name
         self.address = f"server://{name}"
@@ -99,6 +101,13 @@ class AggregationServer:
         # for non-array weight trees, unknown aggregator names, or when
         # REPRO_AGG_PATH=tree forces the per-leaf reference end to end
         self._flat = flatbuf.flat_state_for(weights, mesh=mesh)
+        # optional server-side optimizer (core/server_opt.py): with the
+        # flat substrate it rides the merge tails as one fused pass; on
+        # the tree fallback _aggregate applies step_tree per leaf
+        self.server_opt = server_opt_mod.make_server_opt(
+            server_opt, **(server_opt_kw or {}))
+        if self._flat is not None:
+            self._flat.server_opt = self.server_opt
         # single weight-exchange path: every transfer is a codec'd Payload
         # with exact wire bytes (core/transport.py); transport_down names
         # the downlink codec (None = symmetric with the uplink)
@@ -541,7 +550,13 @@ class AggregationServer:
                 self.weights, [u.weights for u in self._cache], ws, alpha)
         else:
             merged = agg.AGGREGATORS[self.aggregator](self._cache)
-            self.weights = agg.mix_into(self.weights, merged, alpha)
+            mixed = agg.mix_into(self.weights, merged, alpha)
+            if self.server_opt is not None:
+                # tree fallback (REPRO_AGG_PATH=tree / non-packable
+                # weights): the per-leaf reference optimizer path — the
+                # flat substrate applies the fused pass in _finish instead
+                mixed = self.server_opt.step_tree(self.weights, mixed)
+            self.weights = mixed
         # the pointer names the *model*: overwrite in place, uid stays stable
         # (workers' ACLs hold this pointer — thesis §3.3.1 step 7)
         self.warehouse.put(self.weights, uid=self.pointer.uid)

@@ -79,6 +79,7 @@ from repro.parallel import sharding as psharding
 from . import aggregation as agg
 from . import flatbuf
 from . import population as population_mod
+from . import server_opt as server_opt_mod
 from . import transport as transport_mod
 from .estimator import TimeEstimator
 from .events import EventLoop
@@ -194,7 +195,8 @@ class Topology:
 
     def __init__(self, *, weights, loop: EventLoop, eval_fn,
                  model_bytes: int, config: TopologyConfig, mesh=None,
-                 target_accuracy: Optional[float] = None):
+                 target_accuracy: Optional[float] = None,
+                 server_opt=None):
         self.cfg = config
         self.loop = loop
         self.eval_fn = eval_fn
@@ -217,6 +219,12 @@ class Topology:
         self._pending: Dict[str, tuple] = {}
         self._alpha = (config.root_alpha if config.root_alpha is not None
                        else (0.5 if config.push == "async" else 1.0))
+        # root-carried server optimizer (core/server_opt.py): leaf merges
+        # stay plain FedAvg, the global install takes the optimizer step.
+        # Passthrough (1x1) has no root merge — build_topology hands the
+        # optimizer to the lone leaf server instead, so 1x1 + server_opt
+        # stays bit-identical to the single-server run.
+        self.server_opt = server_opt if not config.passthrough else None
         if config.passthrough:
             self.transport = None
             self._server_acks = None
@@ -238,6 +246,8 @@ class Topology:
             # same fast-path/fallback rules as the leaf servers, shared
             # helpers so the tiers can never drift apart
             self._flat = flatbuf.flat_state_for(weights, mesh=mesh)
+            if self._flat is not None:
+                self._flat.server_opt = self.server_opt
             self._use_vec = agg.use_flat_vec(self._flat, self.transport,
                                              config.root_aggregator)
         # passthrough: finalize() replaces the root history with the
@@ -446,7 +456,12 @@ class Topology:
                 self.weights, [u.weights for u in ups], ws, alpha)
         else:
             merged = agg.AGGREGATORS[self.cfg.root_aggregator](ups)
-            self.weights = agg.mix_into(self.weights, merged, alpha)
+            mixed = agg.mix_into(self.weights, merged, alpha)
+            if self.server_opt is not None:
+                # tree fallback: per-leaf reference optimizer path (the
+                # flat substrate runs the fused pass in _finish instead)
+                mixed = self.server_opt.step_tree(self.weights, mixed)
+            self.weights = mixed
         self.version += 1
         acc = float(self.eval_fn(self.weights))
         alive = sum(1 for lf in self.leaves.values() if not lf.dead)
@@ -628,6 +643,12 @@ class Topology:
         self.failovers += 1
         old = self.transport
         self.weights = promoted.server.weights
+        if self.server_opt is not None:
+            # the optimizer vectors are the ROLE's state (like the ack
+            # registry): momentum / second moments ride the promotion;
+            # only the packed prev anchor is dropped so the next step
+            # re-anchors against the promoted model
+            self.server_opt.rebase()
         tr = transport_mod.Transport(
             self.weights, codec=self.cfg.server_codec,
             down_codec=self.cfg.server_codec_down,
@@ -727,7 +748,8 @@ def build_topology(setup, *, topology, mode: str = "sync",
                    transport_down: Optional[str] = None,
                    transport_frac: float = 0.1,
                    server_mesh: Optional[int] = None,
-                   cohort: Optional[int] = None, cohort_seed: int = 0):
+                   cohort: Optional[int] = None, cohort_seed: int = 0,
+                   server_opt=None, server_opt_kw: Optional[dict] = None):
     """Construct (but do not run) one hierarchical system: the shared
     event loop, the root :class:`Topology`, and one leaf
     :class:`AggregationServer` per pool with its own estimator, selector,
@@ -738,10 +760,16 @@ def build_topology(setup, *, topology, mode: str = "sync",
     cfg = parse_topology(topology)
     loop = EventLoop()
     mesh = None if server_mesh is None else psharding.agg_mesh(server_mesh)
+    # leaf merges stay plain FedAvg — the ROOT carries the server
+    # optimizer (the global install is the pseudo-gradient step).  In
+    # passthrough there is no root merge, so the lone leaf server gets
+    # the optimizer instead, keeping 1x1 == single-server bit-exactly.
+    opt = server_opt_mod.make_server_opt(server_opt, **(server_opt_kw or {}))
     topo = Topology(weights=setup.weights0, loop=loop, eval_fn=setup.eval_fn,
                     model_bytes=setup.model_bytes, config=cfg, mesh=mesh,
                     target_accuracy=None if cfg.passthrough
-                    else target_accuracy)
+                    else target_accuracy,
+                    server_opt=None if cfg.passthrough else opt)
     pools = _partition_pools(len(setup.profiles), cfg)
     ack_registry = transport_mod.WorkerAckRegistry()
     transports = [transport_mod.Transport(setup.weights0, codec=transport,
@@ -793,7 +821,8 @@ def build_topology(setup, *, topology, mode: str = "sync",
             async_min_updates=async_min_updates, async_delta=async_delta,
             async_latest_table=async_latest_table, transport=transports[j],
             mesh=mesh, name=f"leaf{j}", population=pop, cohort=cohort,
-            cohort_seed=cohort_seed + j)
+            cohort_seed=cohort_seed + j,
+            server_opt=opt if cfg.passthrough else None)
         for i in pool:
             prof, shard = setup.profiles[i], setup.shards[i]
             server.add_worker(FLWorker(

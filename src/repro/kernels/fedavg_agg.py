@@ -134,6 +134,91 @@ def fedavg_delta_flat(server: jnp.ndarray, deltas: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Server-optimizer step: one fused elementwise pass over the packed buffers
+# ---------------------------------------------------------------------------
+# The merge produced `merged` (the FedAvg-style aggregate, already
+# alpha-mixed); the server optimizer transforms the pseudo-gradient
+# d = merged - prev into the actual server step in the SAME packed space:
+#
+#   m' = am * m + bm * d                      (momentum / drift state)
+#   v' = av * v + bv * d*d                    (adam second moment)
+#   new = prev + cd * d + lr * m'             (momentum form, adam=False)
+#   new = prev + lr * m' / (sqrt(v') + tau)   (adam form,     adam=True)
+#
+# One scalar vector covers FedAvgM (am=mu, bm=1, cd=0), FedDyn-style drift
+# (am=1, bm=1, cd=1, lr=gamma) and FedAdam (am=b1, bm=1-b1, av=b2,
+# bv=1-b2) — see core/server_opt.py for the optimizer table.  Everything
+# is elementwise along N, so the sharded variant needs no collective.
+
+def _opt_mom_kernel(sc_ref, prev_ref, mg_ref, m_ref, o_new_ref, o_m_ref):
+    sc = sc_ref[...].astype(jnp.float32)          # (1, 4): am, bm, cd, lr
+    prev = prev_ref[...].astype(jnp.float32)      # (1, BN)
+    d = mg_ref[...].astype(jnp.float32) - prev
+    m = sc[0, 0] * m_ref[...].astype(jnp.float32) + sc[0, 1] * d
+    o_m_ref[...] = m.astype(o_m_ref.dtype)
+    o_new_ref[...] = (prev + sc[0, 2] * d
+                      + sc[0, 3] * m).astype(o_new_ref.dtype)
+
+
+def _opt_adam_kernel(sc_ref, prev_ref, mg_ref, m_ref, v_ref,
+                     o_new_ref, o_m_ref, o_v_ref):
+    sc = sc_ref[...].astype(jnp.float32)          # (1, 6): b1, b2, lr, tau
+    prev = prev_ref[...].astype(jnp.float32)
+    d = mg_ref[...].astype(jnp.float32) - prev
+    m = sc[0, 0] * m_ref[...].astype(jnp.float32) + (1.0 - sc[0, 0]) * d
+    v = sc[0, 1] * v_ref[...].astype(jnp.float32) + (1.0 - sc[0, 1]) * d * d
+    o_m_ref[...] = m.astype(o_m_ref.dtype)
+    o_v_ref[...] = v.astype(o_v_ref.dtype)
+    o_new_ref[...] = (prev + sc[0, 2] * m
+                      / (jnp.sqrt(v) + sc[0, 3])).astype(o_new_ref.dtype)
+
+
+def _pad_vecs(vecs, pad):
+    return [jnp.pad(v.reshape(1, -1), ((0, 0), (0, pad))) if pad
+            else v.reshape(1, -1) for v in vecs]
+
+
+def server_opt_step_flat(prev, merged, m, v, scalars, *, adam: bool,
+                         block_n: int = 512, interpret: bool = False):
+    """Fused optimizer step over (N,) packed f32 buffers.
+
+    ``scalars``: (4,) ``[am, bm, cd, lr]`` for the momentum form or (6,)
+    ``[b1, b2, lr, tau, 0, 0]`` for the adam form.  Returns
+    ``(new, m', v')`` with ``v'`` None when ``adam`` is False."""
+    N = prev.shape[-1]
+    block_n = min(block_n, N)
+    pad = (-N) % block_n
+    Np = N + pad
+    if adam:
+        sc = scalars.astype(jnp.float32).reshape(1, 6)
+        prev_p, mg_p, m_p, v_p = _pad_vecs((prev, merged, m, v), pad)
+        outs = pl.pallas_call(
+            _opt_adam_kernel,
+            grid=(Np // block_n,),
+            in_specs=[pl.BlockSpec((1, 6), lambda i: (0, 0))]
+            + [pl.BlockSpec((1, block_n), lambda i: (0, i))] * 4,
+            out_specs=[pl.BlockSpec((1, block_n), lambda i: (0, i))] * 3,
+            out_shape=[jax.ShapeDtypeStruct((1, Np), jnp.float32)] * 3,
+            interpret=interpret,
+        )(sc, prev_p, mg_p, m_p, v_p)
+        new, m_out, v_out = (o[0, :N] for o in outs)
+        return new, m_out, v_out
+    sc = scalars.astype(jnp.float32).reshape(1, 4)
+    prev_p, mg_p, m_p = _pad_vecs((prev, merged, m), pad)
+    outs = pl.pallas_call(
+        _opt_mom_kernel,
+        grid=(Np // block_n,),
+        in_specs=[pl.BlockSpec((1, 4), lambda i: (0, 0))]
+        + [pl.BlockSpec((1, block_n), lambda i: (0, i))] * 3,
+        out_specs=[pl.BlockSpec((1, block_n), lambda i: (0, i))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((1, Np), jnp.float32)] * 2,
+        interpret=interpret,
+    )(sc, prev_p, mg_p, m_p)
+    new, m_out = (o[0, :N] for o in outs)
+    return new, m_out, None
+
+
+# ---------------------------------------------------------------------------
 # Sharded variants: shard_map over a 1-D server mesh, N-sharded buffers
 # ---------------------------------------------------------------------------
 
@@ -199,3 +284,35 @@ def fedavg_agg_flat_sharded(stacked: jnp.ndarray, weights: jnp.ndarray, *,
     return shard_map(local, mesh=mesh, in_specs=(P(), P(None, axis)),
                      out_specs=P() if gather else P(axis),
                      check_rep=False)(weights, stacked)
+
+
+def server_opt_step_flat_sharded(prev, merged, m, v, scalars, *,
+                                 adam: bool, mesh, axis: str = "agg",
+                                 block_n: int = 512,
+                                 interpret: bool = False):
+    """Sharded fused optimizer step: every buffer is ``P(axis)`` along N
+    and the update is elementwise, so each device runs the single-pass
+    kernel on its own (N/D,) slice — no collective at all (the optimizer
+    never couples coordinates across shards)."""
+    N = prev.shape[-1]
+    _check_shardable(N, mesh, axis)
+    if adam:
+        def local(sc, p, mg, mm, vv):
+            return server_opt_step_flat(p, mg, mm, vv, sc, adam=True,
+                                        block_n=block_n,
+                                        interpret=interpret)
+        return shard_map(local, mesh=mesh,
+                         in_specs=(P(), P(axis), P(axis), P(axis), P(axis)),
+                         out_specs=(P(axis), P(axis), P(axis)),
+                         check_rep=False)(scalars, prev, merged, m, v)
+
+    def local_mom(sc, p, mg, mm):
+        new, mo, _ = server_opt_step_flat(p, mg, mm, None, sc, adam=False,
+                                          block_n=block_n,
+                                          interpret=interpret)
+        return new, mo
+    new, mo = shard_map(local_mom, mesh=mesh,
+                        in_specs=(P(), P(axis), P(axis), P(axis)),
+                        out_specs=(P(axis), P(axis)),
+                        check_rep=False)(scalars, prev, merged, m)
+    return new, mo, None

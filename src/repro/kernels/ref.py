@@ -55,6 +55,53 @@ def reference_fedavg_sharded(stacked, weights, server, server_scale,
     return jnp.concatenate(outs).astype(server.dtype)
 
 
+def reference_server_opt(prev, merged, m, v, scalars, *, adam: bool):
+    """Oracle for the fused server-optimizer step (``server_opt_step_flat``).
+
+    ``d = merged - prev`` is the pseudo-gradient the FedAvg merge implies;
+    the optimizer turns it into the actual server step:
+
+      momentum form (``adam=False``, scalars = [am, bm, cd, lr]):
+        m' = am*m + bm*d;  new = prev + cd*d + lr*m'
+      adam form (``adam=True``, scalars = [b1, b2, lr, tau, 0, 0]):
+        m' = b1*m + (1-b1)*d;  v' = b2*v + (1-b2)*d^2
+        new = prev + lr * m' / (sqrt(v') + tau)
+
+    Returns ``(new, m', v')`` with ``v'`` None in the momentum form."""
+    f32 = jnp.float32
+    prev, merged, m = prev.astype(f32), merged.astype(f32), m.astype(f32)
+    sc = jnp.asarray(scalars, f32)
+    d = merged - prev
+    if adam:
+        mo = sc[0] * m + (1.0 - sc[0]) * d
+        vo = sc[1] * v.astype(f32) + (1.0 - sc[1]) * d * d
+        return prev + sc[2] * mo / (jnp.sqrt(vo) + sc[3]), mo, vo
+    mo = sc[0] * m + sc[1] * d
+    return prev + sc[2] * d + sc[3] * mo, mo, None
+
+
+def reference_server_opt_sharded(prev, merged, m, v, scalars, *,
+                                 adam: bool, n_shards: int):
+    """Oracle for the shard_map'ed optimizer step: slice N into equal
+    ranges, step per shard, concatenate.  The update is elementwise, so
+    this must equal the global step exactly — any cross-shard coupling in
+    the sharded kernel would break the equality."""
+    N = prev.shape[-1]
+    assert N % n_shards == 0, (N, n_shards)
+    S = N // n_shards
+    news, mos, vos = [], [], []
+    for dshard in range(n_shards):
+        sl = slice(dshard * S, (dshard + 1) * S)
+        new, mo, vo = reference_server_opt(
+            prev[sl], merged[sl], m[sl], None if v is None else v[sl],
+            scalars, adam=adam)
+        news.append(new)
+        mos.append(mo)
+        vos.append(vo)
+    return (jnp.concatenate(news), jnp.concatenate(mos),
+            None if vos[0] is None else jnp.concatenate(vos))
+
+
 def reference_topk_quant_encode(x, thresh, scale):
     """Oracle for the fused topk-threshold + int8 quantise encode: entries
     with |x| >= thresh are linearly quantised to int8 (zero elsewhere); the

@@ -59,6 +59,46 @@ def mlp_sgd_train(params, x, y, lr: float = 0.1, epochs: int = 1, mb: int = 32):
     return params
 
 
+@functools.partial(jax.jit, static_argnames=("lr", "epochs", "mb", "mu"))
+def _mlp_prox_train_jit(params, x, y, lr: float, epochs: int, mb: int,
+                        mu: float):
+    n = x.shape[0]
+    nb = max(n // mb, 1)
+    xb = x[:nb * mb].reshape(nb, mb, *x.shape[1:])
+    yb = y[:nb * mb].reshape(nb, mb)
+    anchor = params     # the fetched global (post lossy-downlink decode)
+
+    def epoch(params, _):
+        def step(p, batch):
+            bx, by = batch
+            g = jax.grad(mlp_loss)(p, bx, by)
+            # FedProx: + mu/2 * ||p - anchor||^2 -> grad term mu*(p - a)
+            return jax.tree.map(
+                lambda w, gr, an: w - lr * (gr + mu * (w - an)),
+                p, g, anchor), None
+        params, _ = jax.lax.scan(step, params, (xb, yb))
+        return params, None
+    params, _ = jax.lax.scan(epoch, params, None, length=epochs)
+    return params
+
+
+def mlp_prox_train(params, x, y, lr: float = 0.1, epochs: int = 1,
+                   mb: int = 32, mu: float = 0.0):
+    """FedProx local training: minibatch SGD on
+    ``mlp_loss + mu/2 * ||p - p_global||^2``, anchored at the params this
+    call RECEIVES — in the FL harness that is the worker's decode of the
+    downlink (the ``tx_base`` reconstruction), so the proximal term
+    composes with lossy transports by construction: the worker is pulled
+    toward the global it actually holds, not a fiction it never saw.
+
+    ``mu=0`` short-circuits to :func:`mlp_sgd_train` — same jitted
+    computation, bit-exact (the ``0.0 * (p - a)`` form is NOT relied on:
+    ±0 edge cases would flip signs)."""
+    if mu == 0.0:
+        return mlp_sgd_train(params, x, y, lr=lr, epochs=epochs, mb=mb)
+    return _mlp_prox_train_jit(params, x, y, lr, epochs, mb, mu)
+
+
 @jax.jit
 def mlp_accuracy(params, x, y):
     pred = jnp.argmax(mlp_logits(params, x), axis=-1)

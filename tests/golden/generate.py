@@ -66,6 +66,28 @@ TOPOLOGY_ALIASES = {
                                  topology="1x1")),
 }
 
+# server-side optimizers (PR 10): server_opt=None must leave every fixture
+# byte-untouched (the merge tail with no optimizer IS the old tail), and
+# the degenerate parameterizations of each optimizer short-circuit to the
+# plain install — all three spellings pin to the SAME fixtures.
+SERVER_OPT_ALIASES = {
+    "raw_opt_none": ("raw", dict(transport="raw", server_opt=None)),
+    "raw_avgm_degenerate": ("raw",
+                            dict(transport="raw", server_opt="fedavgm",
+                                 server_opt_kw={"momentum": 0.0, "lr": 1.0})),
+    "raw_adam_degenerate": ("raw",
+                            dict(transport="raw", server_opt="fedadam",
+                                 server_opt_kw={"beta1": 0.0, "beta2": 0.0,
+                                                "tau": float("inf")})),
+    "raw_dyn_degenerate": ("raw",
+                           dict(transport="raw", server_opt="feddyn",
+                                server_opt_kw={"gamma": 0.0})),
+    "uplink_only_opt_none": ("uplink_only",
+                             dict(transport="topk_ef+int8",
+                                  transport_down="raw", transport_frac=0.1,
+                                  server_opt=None)),
+}
+
 
 def history_record(h):
     return [{"time": p.time.hex(), "version": p.version,

@@ -249,6 +249,57 @@ def test_kill_root_under_loss_books_still_close():
     audit_chaos_run(res.topology)
 
 
+def test_root_failover_carries_server_opt_state():
+    """PR-10 fix: the root-carried server optimizer's vectors must ride
+    the promotion like the ack registry — the promoted root keeps taking
+    REAL optimizer steps (momentum state non-null, next merge transforms
+    the install) instead of silently reverting to plain FedAvg, and the
+    books still close."""
+    setup = make_setup(TABLE_4_1["mnist_even"], **SETUP_KW)
+    res = run_fl_topology(
+        setup, topology=parse_topology("1x3"), mode="sync",
+        selector="all", epochs_per_round=EP, max_rounds=ROUNDS,
+        transport="topk_ef+int8", transport_frac=0.1,
+        server_opt="fedavgm", server_opt_kw={"momentum": 0.9},
+        on_build=_kill_root_after_merge(1))
+    topo = res.topology
+    assert topo.failovers == 1
+    assert topo.version > 1                 # merges continued post-death
+    opt = topo.server_opt
+    assert opt is not None and opt.momentum == 0.9
+    # pre-death merges built momentum; post-death merges kept using it
+    assert opt._m is not None or opt._m_tree is not None
+    # the same object is wired into the flat substrate's merge tail (the
+    # substrate survives _promote_root — state rides structurally)
+    if topo._flat is not None:
+        assert topo._flat.server_opt is opt
+    # rebase dropped the stale anchor; the post-failover step re-anchored
+    # on the promoted model (prev tracking alive again)
+    assert opt._prev_tree is topo.weights
+    audit_chaos_run(topo)
+
+
+def test_kill_root_under_loss_with_server_opt_books_close():
+    """Sampled chaos + root kill with FedAdam at the root: adaptive-step
+    state must not break the delivery ledger or version monotonicity."""
+    sched = ChaosSchedule(seed=88, drop_p=0.15, dup_p=0.05, horizon=1.0,
+                          n_worker_kills=1)
+
+    def on_build(topo):
+        sched.apply(topo)
+        _kill_root_after_merge(1)(topo)
+
+    setup = make_setup(TABLE_4_1["mnist_even"], **SETUP_KW)
+    res = run_fl_topology(
+        setup, topology=parse_topology("1x3"), mode="sync",
+        selector="all", epochs_per_round=EP, max_rounds=ROUNDS,
+        transport="topk_ef+int8", transport_frac=0.1,
+        server_opt="fedadam", server_opt_kw={"lr": 0.05},
+        on_build=on_build)
+    assert res.topology.failovers == 1
+    audit_chaos_run(res.topology)
+
+
 def test_kill_root_on_passthrough_raises():
     setup = make_setup(TABLE_4_1["mnist_even"], **SETUP_KW)
 

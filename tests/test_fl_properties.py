@@ -125,3 +125,119 @@ def test_federation_snapshot_roundtrip_exact(mode, seed):
     assert snap3.clock == snap.clock
     assert sorted((r["kind"], r["t"]) for r in snap3.events) \
         == sorted((r["kind"], r["t"]) for r in snap.events)
+
+
+# ---------------- non-IID partitioner properties ----------------
+
+import numpy as np                                          # noqa: E402
+
+from repro.data import synth                                # noqa: E402
+
+
+def _pool(n=1200, seed=0):
+    # labels only matter for the partition properties; tiny images keep
+    # hypothesis examples fast
+    x, y = synth.make_classification_dataset(n, hw=8, seed=seed)
+    return x, y
+
+
+_POOL_X, _POOL_Y = _pool()
+
+
+@given(st.floats(0.05, 50.0), st.integers(0, 2 ** 31 - 1),
+       st.lists(st.integers(0, 4), min_size=2, max_size=8))
+@settings(deadline=None, max_examples=25)
+def test_dirichlet_conserves_samples_exactly(alpha, seed, batches):
+    """No drop, no dup: the union of shard indices is a subset-partition
+    of the pool with each worker holding EXACTLY its allocated count
+    (while the pool can supply it)."""
+    bs = 16
+    want_total = sum(batches) * bs
+    hypothesis.assume(want_total <= len(_POOL_X))
+    shards = synth.dirichlet_split(_POOL_X, _POOL_Y, batches,
+                                   batch_size=bs, alpha=alpha, seed=seed)
+    assert len(shards) == len(batches)               # all workers covered
+    for nb, s in zip(batches, shards):
+        assert len(s["x"]) == nb * bs                # exact allocation
+        assert len(s["y"]) == nb * bs
+    total = sum(len(s["x"]) for s in shards)
+    assert total == want_total
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(deadline=None, max_examples=10)
+def test_dirichlet_no_index_dup(seed):
+    """Strong no-dup check on the index level: partition a pool whose
+    samples are made unique by construction (index-valued feature)."""
+    n = 640
+    x = np.arange(n, dtype=np.float32).reshape(n, 1, 1, 1)
+    y = (np.arange(n) % 10).astype(np.int32)
+    shards = synth.dirichlet_split(x, y, [4] * 10, batch_size=16,
+                                   alpha=0.3, seed=seed)
+    ids = np.concatenate([s["x"].reshape(-1) for s in shards])
+    assert len(ids) == n
+    assert len(np.unique(ids)) == n                 # no drop, no dup
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(deadline=None, max_examples=10)
+def test_dirichlet_seed_determinism(seed):
+    a = synth.dirichlet_split(_POOL_X, _POOL_Y, [3] * 8, batch_size=16,
+                              alpha=0.5, seed=seed)
+    b = synth.dirichlet_split(_POOL_X, _POOL_Y, [3] * 8, batch_size=16,
+                              alpha=0.5, seed=seed)
+    for sa, sb in zip(a, b):
+        assert np.array_equal(sa["x"], sb["x"])
+        assert np.array_equal(sa["y"], sb["y"])
+    c = synth.dirichlet_split(_POOL_X, _POOL_Y, [3] * 8, batch_size=16,
+                              alpha=0.5, seed=seed + 1)
+    assert any(not np.array_equal(sa["y"], sc["y"]) for sa, sc in zip(a, c))
+
+
+def _label_hists(shards, n_classes=10):
+    return np.stack([np.bincount(s["y"], minlength=n_classes)
+                     for s in shards if len(s["y"])])
+
+
+def test_dirichlet_alpha_extremes():
+    """alpha -> inf: per-worker label histograms approach the uniform
+    mixture; alpha -> 0: each worker concentrates on ~1 class."""
+    big = synth.dirichlet_split(_POOL_X, _POOL_Y, [4] * 10, batch_size=16,
+                                alpha=1e4, seed=0)
+    tiny = synth.dirichlet_split(_POOL_X, _POOL_Y, [4] * 10, batch_size=16,
+                                 alpha=1e-3, seed=0)
+    h_big, h_tiny = _label_hists(big), _label_hists(tiny)
+    # top-class share: ~0.1 when uniform, ~1.0 when single-label
+    share_big = (h_big.max(axis=1) / h_big.sum(axis=1)).mean()
+    share_tiny = (h_tiny.max(axis=1) / h_tiny.sum(axis=1)).mean()
+    assert share_big < 0.25, share_big
+    # pool exhaustion steals from rich classes, so perfect 1.0 is not
+    # reachable for every worker — but concentration must dominate
+    assert share_tiny > 0.6, share_tiny
+    assert share_tiny > share_big + 0.3
+
+
+@given(st.floats(0.05, 50.0), st.integers(0, 2 ** 31 - 1))
+@settings(deadline=None, max_examples=15)
+def test_quantity_skew_conserves_batch_total(alpha, seed):
+    batches = [2, 0, 3, 1, 0, 4]
+    bs = 16
+    shards = synth.quantity_skew_split(_POOL_X, _POOL_Y, batches,
+                                       batch_size=bs, alpha=alpha, seed=seed)
+    assert len(shards) == len(batches)
+    total = sum(len(s["x"]) for s in shards)
+    assert total == sum(batches) * bs               # whole-batch conserved
+    for nb, s in zip(batches, shards):
+        assert len(s["x"]) % bs == 0                # whole batches only
+        if nb == 0:
+            assert len(s["x"]) == 0                 # empty workers stay empty
+
+
+def test_partition_iid_is_the_original_split():
+    shards_a = synth.federated_split(_POOL_X, _POOL_Y, [3] * 8,
+                                     batch_size=16, seed=7)
+    shards_b = synth.partition_split(_POOL_X, _POOL_Y, [3] * 8,
+                                     partition="iid", batch_size=16, seed=7)
+    for sa, sb in zip(shards_a, shards_b):
+        assert np.array_equal(sa["x"], sb["x"])
+        assert np.array_equal(sa["y"], sb["y"])

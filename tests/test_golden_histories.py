@@ -44,6 +44,11 @@ TRANSPORTS = {
 }
 _ALIASES = dict(_gen.MESH1_ALIASES)
 _ALIASES.update(_gen.TOPOLOGY_ALIASES)
+# PR-10 server-optimizer aliases: server_opt=None and every degenerate
+# optimizer parameterization (FedAvgM momentum=0/lr=1, FedAdam
+# beta1=beta2=0/tau=inf, FedDyn gamma=0) short-circuit to the plain
+# install and pin float-hex-identical to the same fixtures.
+_ALIASES.update(_gen.SERVER_OPT_ALIASES)
 TRANSPORTS.update({alias: kw for alias, (_, kw) in _ALIASES.items()})
 _FIXTURE_OF = {alias: base for alias, (base, _) in _ALIASES.items()}
 
